@@ -1,0 +1,33 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall-time per call in µs (after jit warmup)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        _block(r)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        _block(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,24 @@
+"""Paper Fig. 10: execution energy vs MRAM read/write energy + Key Obs 4
+(read 45% / write 55% split at the 50/70 pJ operating point)."""
+from repro.core import MramParams, Workload, simulate
+
+from .common import emit
+
+W = Workload(ref_size=131072, query_size=8192, num_queries=8192)
+COLS = 131072
+
+
+def main():
+    for rd_pj in (20, 50, 100):
+        r = simulate(W, COLS, MramParams(read_pj=rd_pj))
+        emit(f"fig10/rd_{rd_pj}pJ", 0.0, f"energy_j={r.energy_j:.3f}")
+    for wr_pj in (30, 70, 400):
+        r = simulate(W, COLS, MramParams(write_pj=wr_pj))
+        emit(f"fig10/wr_{wr_pj}pJ", 0.0, f"energy_j={r.energy_j:.3f}")
+    base = simulate(W, COLS)
+    emit("fig10/key4_read_frac", 0.0,
+         f"model={base.read_energy_frac:.3f} paper=0.45")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 13: execution time vs MATSA size (compute columns) + Key Obs 6
+(near-ideal scaling)."""
+from repro.core import Workload, simulate
+from repro.core.pum_model import CROSSBAR_DIM, SWEEP
+
+from .common import emit
+
+W = Workload(ref_size=131072, query_size=8192, num_queries=8192)
+
+
+def main():
+    prev = None
+    for xbars in SWEEP["num_crossbars"]:
+        cols = xbars * CROSSBAR_DIM
+        r = simulate(W, cols)
+        speedup = "" if prev is None else f"step_speedup={prev/r.exec_time_s:.2f}"
+        emit(f"fig13/{xbars}xbars_{cols//1024}Kcols", 0.0,
+             f"time_s={r.exec_time_s:.2f};{speedup}")
+        prev = r.exec_time_s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""§Roofline: render the per-(arch × shape) table from dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+the single-pod roofline table: three terms, dominant bottleneck, MODEL_FLOPS
+ratio, and the what-would-move-it suggestion. Markdown written to
+experiments/roofline_table.md for EXPERIMENTS.md inclusion.
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+SUGGEST = {
+    ("compute",): "raise MXU occupancy: larger per-chip tiles, fewer pads",
+    ("memory",): "cut HBM traffic: fuse/remat less, wider blocks, bf16/fp8",
+    ("collective",): "reshard: fewer weight gathers, overlap a2a, pod-local",
+}
+
+
+def suggestion(rec):
+    r = rec["roofline"]
+    dom = r["dominant"]
+    if dom == "memory" and r["useful_flops_ratio"] < 0.5:
+        return ("memory-bound with low useful-flop ratio — remove remat/"
+                "masked-half recompute first")
+    if dom == "collective":
+        cb = rec["collectives"]["bytes"]
+        top = max(cb, key=cb.get)
+        return f"collective-bound ({top}): reshard to cut {top} volume"
+    return SUGGEST[(dom,)]
+
+
+def main(write_md: bool = True):
+    rows = []
+    for fn in sorted(glob.glob("experiments/dryrun/16x16__*.json")):
+        rec = json.load(open(fn))
+        if rec["status"] != "ok":
+            if rec["status"] == "skipped":
+                rows.append((rec["arch"], rec["shape"], None, rec["reason"]))
+            continue
+        rows.append((rec["arch"], rec["shape"], rec["roofline"],
+                     suggestion(rec)))
+        r = rec["roofline"]
+        emit(f"roofline/{rec['arch']}/{rec['shape']}",
+             r["bound_time_s"] * 1e6,
+             f"dom={r['dominant']};c={r['compute_s']:.3e};"
+             f"m={r['memory_s']:.3e};x={r['collective_s']:.3e};"
+             f"useful={r['useful_flops_ratio']:.2f};"
+             f"roofline_frac={r['roofline_fraction']:.3f}")
+
+    if write_md and rows:
+        lines = [
+            "| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL/HLO flops | roofline frac | next lever |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+        for arch, shape, r, note in rows:
+            if r is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | — "
+                             f"| — | {note} |")
+            else:
+                lines.append(
+                    f"| {arch} | {shape} | {r['compute_s']:.2e} | "
+                    f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+                    f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                    f"{r['roofline_fraction']:.3f} | {note} |")
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/roofline_table.md", "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+
+
+def main() -> None:
+    from . import (fig09_latency_sweep, fig10_energy_sweep,
+                   fig11_12_dataset_sweep, fig13_scaling, table6_speedups,
+                   sdtw_kernel_bench, roofline_table, endurance)
+    print("name,us_per_call,derived")
+    fig09_latency_sweep.main()
+    fig10_energy_sweep.main()
+    fig11_12_dataset_sweep.main()
+    fig13_scaling.main()
+    table6_speedups.main()
+    endurance.main()
+    sdtw_kernel_bench.main()
+    roofline_table.main()
+
+
+if __name__ == '__main__':
+    main()

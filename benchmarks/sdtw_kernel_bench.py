@@ -1,0 +1,47 @@
+"""sDTW implementation shoot-out on this host (CPU wall-times).
+
+Compares the paper-faithful wavefront schedule against the beyond-paper
+tropical row-scan and the Pallas kernel (interpret mode on CPU — its TPU
+performance is projected by the roofline, not measured here). Feeds
+EXPERIMENTS.md §Perf (paper-faithful baseline vs optimized, measured)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sdtw_batch
+from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
+
+from .common import emit, time_call
+
+
+def main():
+    rng = np.random.default_rng(0)
+    b, n, m = 8, 64, 4096
+    q = jnp.asarray(rng.integers(-100, 100, (b, n)).astype(np.int32))
+    r = jnp.asarray(rng.integers(-100, 100, m).astype(np.int32))
+
+    fns = {
+        "naive_scan_oracle": lambda: sdtw_ref_jnp(q, r),
+        "wavefront_paper_faithful": functools.partial(
+            sdtw_batch, q, r, impl="wavefront"),
+        "rowscan_tropical": functools.partial(
+            sdtw_batch, q, r, impl="rowscan"),
+        "pallas_interpret": functools.partial(
+            sdtw_pallas, q, r, block_q=8, block_m=512),
+    }
+    base = None
+    for name, fn in fns.items():
+        us = time_call(fn, repeats=3, warmup=1)
+        cells = b * n * m
+        rate = cells / (us * 1e-6) / 1e6
+        speedup = "" if base is None else f";speedup_vs_naive={base/us:.1f}x"
+        emit(f"sdtw_kernel/{name}_b{b}_n{n}_m{m}", us,
+             f"Mcells_per_s={rate:.1f}{speedup}")
+        if base is None:
+            base = us
+
+
+if __name__ == "__main__":
+    main()

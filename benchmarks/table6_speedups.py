@@ -1,0 +1,33 @@
+"""Paper Figs. 14/15 + Table VI: MATSA versions vs CPU/GPU/FPGA/UPMEM on the
+six real-world datasets. Prints per-pair geomean speedup/energy ratios next
+to the paper's claims."""
+import statistics
+
+from repro.core import (PAPER_TABLE6, PLATFORMS, VERSIONS, Workload,
+                        load_real_workload_shapes, simulate)
+
+from .common import emit
+
+
+def main():
+    shapes = load_real_workload_shapes()
+    for (ver, plat), (want_sp, want_en) in sorted(PAPER_TABLE6.items()):
+        v, p = VERSIONS[ver], PLATFORMS[plat]
+        sp, en = [], []
+        for name, s in shapes.items():
+            w = Workload(s["ref_size"], s["query_size"], s["num_queries"])
+            r = simulate(w, v.compute_columns)
+            sp.append(p.exec_time_s(w) / r.exec_time_s)
+            en.append(p.energy_j(w) / r.energy_j)
+            emit(f"table6/{ver}/{plat}/{name}", r.exec_time_s * 1e6,
+                 f"speedup={sp[-1]:.2f};energy_x={en[-1]:.2f}")
+        gsp = statistics.geometric_mean(sp)
+        gen = statistics.geometric_mean(en)
+        emit(f"table6/{ver}/{plat}/GEOMEAN", 0.0,
+             f"speedup={gsp:.2f} (paper {want_sp});"
+             f"energy_x={gen:.2f} (paper {want_en});"
+             f"dev={100*(gsp/want_sp-1):+.1f}%/{100*(gen/want_en-1):+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fault-tolerance showcase: failure injection + bit-identical recovery +
+elastic restart (the checkpointed run resumes with a different data-shard
+layout, as after a pod loss).
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import DataConfig, SyntheticLM
+from repro.ft import FailureInjector, RunnerConfig, TrainingRunner
+from repro.models import RunConfig, init_lm
+from repro.optim import OptConfig
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+cfg = get_arch("granite-moe-1b-a400m").reduced()
+run = RunConfig(remat="none")
+tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=24))
+data = SyntheticLM(DataConfig(seed=3, seq_len=32, global_batch=4,
+                              vocab=cfg.vocab))
+key = jax.random.PRNGKey(0)
+step = jax.jit(make_train_step(cfg, run, tcfg))
+
+def fresh():
+    return init_train_state(cfg, init_lm(cfg, key), tcfg)
+
+d_ok = tempfile.mkdtemp()
+d_ft = tempfile.mkdtemp()
+
+print("run A: 24 steps, no failures")
+out_a = TrainingRunner(step, data, fresh(), d_ok,
+                       RunnerConfig(total_steps=24, ckpt_every=6)).run()
+
+print("run B: failures injected at steps 8 and 17 → auto-restart from ckpt")
+out_b = TrainingRunner(step, data, fresh(), d_ft,
+                       RunnerConfig(total_steps=24, ckpt_every=6),
+                       injector=FailureInjector(fail_at=(8, 17))).run()
+
+diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+           for a, b in zip(jax.tree.leaves(out_a["state"]["params"]),
+                           jax.tree.leaves(out_b["state"]["params"])))
+print(f"restarts: {out_b['restarts']}, max param divergence: {diff:.2e} "
+      f"({'bit-identical ✓' if diff == 0 else 'MISMATCH'})")
+
+shutil.rmtree(d_ok), shutil.rmtree(d_ft)

@@ -1,0 +1,67 @@
+"""End-to-end training driver: TSA-filtered data → LM training.
+
+The paper's Fig. 2 pipeline, productionised: a synthetic sensor stream is
+filtered by sDTW (only anomalous windows survive — the interesting 10%),
+quantised to tokens, and used to train a language model with the full
+framework stack (AdamW, remat, checkpointing, fault-tolerant runner).
+
+Default is a CPU-friendly model; ``--full-100m`` trains a ~100M-param
+llama3.2-1b-derived config (a few hundred steps; expect hours on this
+container's single CPU core — it exists to satisfy the end-to-end-driver
+contract, and on a real mesh the same flags + --mesh run it distributed).
+
+Run:  PYTHONPATH=src python examples/train_tsa_lm.py --steps 30
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.data import DataConfig, TSAFilteredLM
+from repro.ft import RunnerConfig, TrainingRunner
+from repro.models import RunConfig, init_lm
+from repro.optim import OptConfig
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=30)
+ap.add_argument("--seq-len", type=int, default=64)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--ckpt", default="/tmp/tsa_lm_ckpt")
+ap.add_argument("--full-100m", action="store_true",
+                help="~100M-param config instead of the reduced one")
+args = ap.parse_args()
+
+cfg = get_arch("llama3.2-1b")
+if args.full_100m:
+    cfg = dataclasses.replace(cfg, n_layers=8, d_model=768, n_heads=12,
+                              n_kv_heads=4, d_ff=2048, head_dim=64,
+                              vocab=8192)   # ≈100M params
+else:
+    cfg = dataclasses.replace(cfg.reduced(), vocab=512, d_model=128,
+                              n_layers=4, d_ff=256)
+
+run = RunConfig(remat="none" if not args.full_100m else "full")
+tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=5,
+                                 total_steps=args.steps))
+data = TSAFilteredLM(DataConfig(seed=11, seq_len=args.seq_len,
+                                global_batch=args.batch, vocab=cfg.vocab),
+                     window=args.seq_len + 1)
+
+params = init_lm(cfg, jax.random.PRNGKey(0))
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {cfg.name}-derived, {n/1e6:.1f}M params; "
+      f"TSA filter feeding tokens")
+
+state = init_train_state(cfg, params, tcfg)
+step = jax.jit(make_train_step(cfg, run, tcfg))
+runner = TrainingRunner(step, data, state, args.ckpt,
+                        RunnerConfig(total_steps=args.steps, ckpt_every=10))
+out = runner.run()
+
+losses = [m["loss"] for m in out["metrics"]]
+print(f"TSA filter stats: kept {data.filter_stats['kept']} / "
+      f"{data.filter_stats['seen']} windows")
+print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} over {len(losses)} steps "
+      f"({'decreasing ✓' if losses[-1] < losses[0] else 'check config'})")

@@ -1,0 +1,59 @@
+"""Pointwise distance metrics for (s)DTW.
+
+The paper supports two metrics (Section II-C / Listing 1):
+  * ``abs_diff``:    d(q, r) = |q - r|
+  * ``square_diff``: d(q, r) = (q - r)^2
+
+Distances are computed in an accumulator dtype wide enough for the DP sums:
+float inputs accumulate in float32, integer inputs accumulate in int32 with
+saturating adds against ``INT_BIG`` (the DP recurrence is monotone, so
+saturation preserves argmin ordering as long as true DP values stay below
+``INT_BIG``; the paper evaluates int32 sensor data whose ranges are small).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Large sentinel for integer DP lattices. Chosen so that sat_add(INT_BIG,
+# INT_BIG) does not overflow int32 (2**29 + 2**29 = 2**30 < 2**31 - 1).
+# Kept as a python int / numpy literal (NOT a jax array) so Pallas kernels
+# can close over it without capturing a traced constant.
+INT_BIG = 2**29
+
+METRICS = ("abs_diff", "square_diff")
+
+
+def accum_dtype(dtype) -> jnp.dtype:
+    """Accumulator dtype for a given input dtype."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.float32
+    return jnp.int32
+
+
+def big(dtype):
+    """+infinity equivalent in the accumulator dtype (numpy scalar)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return np.asarray(np.inf, dtype)
+    return np.asarray(INT_BIG, dtype)
+
+
+def sat_add(a, b):
+    """Saturating add: exact for floats (inf-safe), clamped for ints."""
+    rt = jnp.result_type(a, b)
+    if jnp.issubdtype(rt, jnp.floating):
+        return a + b
+    return jnp.minimum(a + b, np.asarray(INT_BIG, rt))
+
+
+def pointwise_distance(q, r, metric: str):
+    """d(q, r) in the accumulator dtype. q/r broadcast."""
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+    acc = accum_dtype(jnp.result_type(q, r))
+    qa = q.astype(acc)
+    ra = r.astype(acc)
+    diff = qa - ra
+    if metric == "abs_diff":
+        return jnp.abs(diff)
+    return diff * diff

@@ -1,0 +1,186 @@
+"""Production sDTW implementations in JAX.
+
+Two execution schemes, both using the paper's O(4M)-style linear memory
+mapping (no N×M matrix is ever materialised):
+
+``sdtw_wavefront``
+    Paper-faithful anti-diagonal wavefront (MATSA §III-E): a scan over the
+    N+M-1 anti-diagonals, vectorized along the diagonal. This mirrors MATSA's
+    PE array, where each crossbar column is one wavefront element and data is
+    shifted diagonally between steps. Sequential depth: N+M-1.
+
+``sdtw_rowscan``
+    Beyond-paper TPU-native scheme. The row recurrence
+
+        s[j] = d[j] + min(m[j], s[j-1]),   m[j] = min(prev[j-1], prev[j])
+
+    is a first-order *linear* recurrence over the (min, +) tropical semiring:
+    with u[j] = d[j] + m[j] it is  s[j] = min(u[j], d[j] + s[j-1]), i.e. the
+    tropical analogue of s_j = a_j * s_{j-1} + b_j. It therefore admits an
+    associative-scan solution with O(log M) depth per row. Sequential depth:
+    N (vs N+M-1) — a massive win when the reference is much longer than the
+    query, which is the common case in the paper's workloads (e.g. ECG:
+    M=1.8M, N=512). MATSA's bit-serial PEs cannot express this; TPU VPUs can.
+
+Both return ``min(S[N-1, :])`` per Algorithm 1 and are validated against
+``sdtw_ref.sdtw_ref`` over shape/dtype/metric sweeps in the test suite.
+
+Exclusion zones (for self-join / matrix-profile-style use) are supported by
+banning a column range [excl_lo, excl_hi): any path through those reference
+positions is given +inf distance, which removes trivial self-matches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .distances import accum_dtype, big, pointwise_distance, sat_add
+
+
+def _tropical_combine(left, right):
+    """Compose f_r ∘ f_l where f(x) = min(u, a + x) over the (min,+) semiring."""
+    a_l, u_l = left
+    a_r, u_r = right
+    return sat_add(a_l, a_r), jnp.minimum(u_r, sat_add(a_r, u_l))
+
+
+def _masked_distance(qi, ref, metric, excl_lo, excl_hi, BIG):
+    d = pointwise_distance(qi, ref, metric)
+    j = jnp.arange(ref.shape[0])
+    banned = (j >= excl_lo) & (j < excl_hi)
+    return jnp.where(banned, BIG, d)
+
+
+# ---------------------------------------------------------------------------
+# Row-scan (associative scan over the tropical semiring) — beyond-paper.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
+                 excl_lo=None, excl_hi=None):
+    """sDTW distance via per-row tropical associative scan.
+
+    Args:
+      query:     (N,) possibly padded query.
+      reference: (M,) reference sequence.
+      qlen:      actual query length (<= N); defaults to N. Padded rows are
+                 ignored — the answer is min over row ``qlen - 1``.
+      metric:    'abs_diff' | 'square_diff'.
+      excl_lo/excl_hi: optional banned reference column range (self-join).
+
+    Returns: scalar sDTW distance in the accumulator dtype.
+    """
+    acc = accum_dtype(jnp.result_type(query, reference))
+    BIG = big(acc)
+    n = query.shape[0]
+    qlen = jnp.asarray(n if qlen is None else qlen, jnp.int32)
+    excl_lo = jnp.asarray(-1 if excl_lo is None else excl_lo, jnp.int32)
+    excl_hi = jnp.asarray(-1 if excl_hi is None else excl_hi, jnp.int32)
+
+    d0 = _masked_distance(query[0], reference, metric, excl_lo, excl_hi, BIG)
+    prev = d0                                           # row 0: free start
+    best0 = jnp.where(qlen == 1, jnp.min(d0), BIG)
+
+    def row_step(carry, qi):
+        prev, best, i = carry
+        d = _masked_distance(qi, reference, metric, excl_lo, excl_hi, BIG)
+        prev_shift = jnp.concatenate([jnp.full((1,), BIG, acc), prev[:-1]])
+        m = jnp.minimum(prev_shift, prev)               # min(S[i-1,j-1], S[i-1,j])
+        s0 = sat_add(prev[0], d[0])                     # column-0 accumulation
+        u = sat_add(d, m).at[0].set(s0)
+        a = d.at[0].set(BIG)
+        _, s = lax.associative_scan(_tropical_combine, (a, u))
+        best = jnp.where(i == qlen - 1, jnp.minimum(best, jnp.min(s)), best)
+        # Freeze rows past the true query end so `prev` stays meaningless-safe.
+        return (s, best, i + 1), None
+
+    (_, best, _), _ = lax.scan(row_step, (prev, best0, jnp.int32(1)), query[1:])
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Anti-diagonal wavefront — paper-faithful (MATSA §III-E execution flow).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def sdtw_wavefront(query, reference, qlen=None, metric: str = "abs_diff",
+                   excl_lo=None, excl_hi=None):
+    """sDTW distance via anti-diagonal wavefront scan (MATSA's schedule).
+
+    Diagonal k holds cells (i, j) with i + j = k, indexed by i. The carry is
+    the last two diagonals (the paper's temporal S_vectors); each step
+    consumes one new reference "column" — the direct analogue of MATSA's
+    diagonal row copies between crossbar columns.
+    """
+    acc = accum_dtype(jnp.result_type(query, reference))
+    BIG = big(acc)
+    n = query.shape[0]
+    m = reference.shape[0]
+    qlen = jnp.asarray(n if qlen is None else qlen, jnp.int32)
+    excl_lo = jnp.asarray(-1 if excl_lo is None else excl_lo, jnp.int32)
+    excl_hi = jnp.asarray(-1 if excl_hi is None else excl_hi, jnp.int32)
+
+    q = query.astype(accum_dtype(query.dtype))
+    # R[k - i] for i in [0, n): pad front with n-1 dummies, slice, reverse.
+    r_pad = jnp.concatenate([jnp.zeros((n - 1,), reference.dtype), reference,
+                             jnp.zeros((n,), reference.dtype)])
+    i_idx = jnp.arange(n)
+
+    def step(carry, k):
+        dm1, dm2, best = carry
+        j_idx = k - i_idx                               # ref position per cell
+        valid = (j_idx >= 0) & (j_idx < m) & (i_idx < qlen)
+        r_rev = lax.dynamic_slice(r_pad, (k,), (n,))[::-1]
+        d = pointwise_distance(q, r_rev.astype(acc), metric)
+        banned = (j_idx >= excl_lo) & (j_idx < excl_hi)
+        d = jnp.where(banned, BIG, d)
+        shift1 = jnp.concatenate([jnp.full((1,), BIG, acc), dm1[:-1]])  # S[i-1,j]
+        shift2 = jnp.concatenate([jnp.full((1,), BIG, acc), dm2[:-1]])  # S[i-1,j-1]
+        mins = jnp.minimum(jnp.minimum(shift2, shift1), dm1)            # +S[i,j-1]
+        cur = jnp.where(i_idx == 0, d, sat_add(d, mins))
+        cur = jnp.where(valid, cur, BIG)
+        last = jnp.where((i_idx == qlen - 1) & valid, cur, BIG)
+        best = jnp.minimum(best, jnp.min(last))
+        return (cur, dm1, best), None
+
+    init = (jnp.full((n,), BIG, acc), jnp.full((n,), BIG, acc), BIG)
+    (_, _, best), _ = lax.scan(step, init, jnp.arange(n + m - 1))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Batched front-ends.
+# ---------------------------------------------------------------------------
+
+_IMPLS = {"rowscan": sdtw_rowscan, "wavefront": sdtw_wavefront}
+
+
+def sdtw_batch(queries, reference, qlens=None, metric: str = "abs_diff",
+               impl: str = "rowscan", excl_lo=None, excl_hi=None):
+    """Batched sDTW: (nq, N) queries against a shared (M,) reference.
+
+    Queries are embarrassingly parallel (paper §II-D) — this is MATSA's
+    reference-replication / query-pipelining axis, mapped to vmap.
+    """
+    fn = _IMPLS[impl]
+    nq, n = queries.shape
+    if qlens is None:
+        qlens = jnp.full((nq,), n, jnp.int32)
+    if excl_lo is None:
+        excl_lo = jnp.full((nq,), -1, jnp.int32)
+        excl_hi = jnp.full((nq,), -1, jnp.int32)
+    return jax.vmap(
+        lambda qu, ql, lo, hi: fn(qu, reference, ql, metric, lo, hi)
+    )(queries, qlens, excl_lo, excl_hi)
+
+
+def self_join_windows(reference, window: int, stride: int = 1):
+    """Extract sliding windows (the paper's self_join mode: slices of the
+    reference compared against the reference itself)."""
+    m = reference.shape[0]
+    starts = jnp.arange(0, m - window + 1, stride)
+    idx = starts[:, None] + jnp.arange(window)[None, :]
+    return reference[idx], starts

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLM, TSAFilteredLM
+
+__all__ = ["DataConfig", "SyntheticLM", "TSAFilteredLM"]

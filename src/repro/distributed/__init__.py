@@ -1,0 +1,3 @@
+from .sharding import Axes, tree_shardings
+
+__all__ = ["Axes", "tree_shardings"]

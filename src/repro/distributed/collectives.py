@@ -1,0 +1,75 @@
+"""Distributed-optimization collectives: compressed gradient reduction.
+
+``int8 all-reduce with error feedback`` — the classic bandwidth trick for
+cross-pod gradient sync (the "pod" axis of the multi-pod mesh has the lowest
+bandwidth):
+
+  1. residual-corrected gradient  g' = g + e      (error feedback buffer e)
+  2. per-tensor symmetric int8 quantisation       (scale = max|g'| / 127)
+  3. all-reduce in int32 (no overflow up to 2^23 summands)
+  4. dequantise with the psum'd scales; update    e ← g' - dequant(quant(g'))
+
+Quantisation+feedback is exact-in-expectation and keeps SGD convergence
+(Karimireddy et al. 2019). ``quantize/dequantize`` are also used standalone
+by the train step's local simulation mode (mesh-free tests), so the wire
+format is unit-testable without devices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(g):
+    """Symmetric per-tensor int8. Returns (q int8, scale f32)."""
+    g = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, feedback):
+    """Quantise a grad pytree with error feedback.
+
+    Returns (dequantised grads — what the wire would deliver on a 1-device
+    reduction —, new feedback buffers, bytes_saved_fraction)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(feedback)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = td.unflatten([o[0] for o in outs])
+    new_fb = td.unflatten([o[1] for o in outs])
+    return deq, new_fb
+
+
+def compressed_psum(g, axis_name):
+    """int8-quantised psum along ``axis_name`` (inside shard_map/pmap).
+
+    Two-phase: (1) agree on a global scale (pmax of local max-abs — a
+    4-byte collective), (2) quantise against the SHARED scale and psum in
+    int32 (no overflow below 2^23 participants). Summing int8 values
+    quantised with heterogeneous per-shard scales would be wrong — the
+    per-shard scale is lost in the integer accumulation.
+    Wire cost: 1 byte/grad element + 4 bytes/tensor.
+    """
+    g = g.astype(jnp.float32)
+    local_max = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = lax.pmax(local_max, axis_name) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    acc = lax.psum(q.astype(jnp.int32), axis_name)
+    n = lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return acc.astype(jnp.float32) * scale / n
+
+
+def init_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,3 @@
+from .runner import FailureInjector, RunnerConfig, TrainingRunner
+
+__all__ = ["TrainingRunner", "RunnerConfig", "FailureInjector"]

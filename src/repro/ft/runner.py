@@ -1,0 +1,127 @@
+"""Fault-tolerant training runner: checkpoint/restart, failure injection,
+straggler watchdog, deterministic resume.
+
+The runner treats a training step as a transaction: on any step failure
+(device loss, preemption — simulated via an injectable ``FailureInjector``)
+it restores the newest complete checkpoint and replays from there. Because
+the data pipeline is a pure function of (seed, step) (data/pipeline.py), the
+recovered run is bit-identical to an uninterrupted one — asserted by the
+integration tests.
+
+Straggler mitigation: per-step wall-times feed an EWMA; steps slower than
+``straggler_factor``× the EWMA are logged and counted (on real fleets this
+signal drives hot-spare promotion / data re-assignment; here it is exercised
+by injecting artificial delays).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro import checkpoint as ckpt
+
+log = logging.getLogger("repro.ft")
+
+
+class FailureInjector:
+    """Deterministically raise at given steps (once each) — simulates
+    preemption/node loss for the restart tests."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 10
+    keep_last: int = 3
+    straggler_factor: float = 3.0
+    max_restarts: int = 10
+
+
+class TrainingRunner:
+    def __init__(self, train_step: Callable, data, state, ckpt_dir: str,
+                 cfg: RunnerConfig = RunnerConfig(),
+                 injector: Optional[FailureInjector] = None,
+                 shard: int = 0, num_shards: int = 1,
+                 delay_hook: Optional[Callable[[int], float]] = None):
+        self.train_step = train_step
+        self.data = data
+        self.state = state
+        self.ckpt_dir = ckpt_dir
+        self.cfg = cfg
+        self.injector = injector
+        self.shard, self.num_shards = shard, num_shards
+        self.delay_hook = delay_hook
+        self.metrics_log: list[dict] = []
+        self.straggler_steps: list[int] = []
+        self.restarts = 0
+        self._ewma = None
+
+    # -- persistence ------------------------------------------------------
+    def _save(self, step: int):
+        ckpt.save(self.ckpt_dir, step, self.state,
+                  extra={"step": step}, keep_last=self.cfg.keep_last)
+
+    def _restore(self) -> int:
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return 0
+        self.state, extra, _ = ckpt.restore(self.ckpt_dir, self.state)
+        log.warning("restored checkpoint at step %d", step)
+        return extra["step"] + 1 if "step" in extra else step + 1
+
+    # -- watchdog ---------------------------------------------------------
+    def _watch(self, step: int, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+        if dt > self.cfg.straggler_factor * self._ewma and step > 2:
+            self.straggler_steps.append(step)
+            log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                        step, dt, self._ewma)
+        self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+    # -- main loop --------------------------------------------------------
+    def run(self) -> dict:
+        step = self._restore() if ckpt.latest_step(self.ckpt_dir) is not None \
+            else 0
+        while step < self.cfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                if self.delay_hook is not None:
+                    time.sleep(self.delay_hook(step))
+                if self.injector is not None:
+                    self.injector.maybe_fail(step)
+                batch = self.data.batch_at(step, self.shard, self.num_shards)
+                batch = jax.tree.map(jax.numpy.asarray, batch)
+                self.state, metrics = self.train_step(self.state, batch)
+                dt = time.perf_counter() - t0
+                self._watch(step, dt)
+                self.metrics_log.append(
+                    {"step": step,
+                     **{k: float(v) for k, v in metrics.items()}})
+                if (step + 1) % self.cfg.ckpt_every == 0:
+                    self._save(step)
+                step += 1
+            except RuntimeError as e:
+                self.restarts += 1
+                log.warning("step %d failed (%s); restart %d", step, e,
+                            self.restarts)
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                step = self._restore()
+        self._save(self.cfg.total_steps - 1)
+        return {"state": self.state, "metrics": self.metrics_log,
+                "restarts": self.restarts,
+                "stragglers": self.straggler_steps}

@@ -1,0 +1,4 @@
+from .ops import sdtw_pallas
+from .ref import sdtw_ref_jnp
+
+__all__ = ["sdtw_pallas", "sdtw_ref_jnp"]

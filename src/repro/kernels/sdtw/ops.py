@@ -1,0 +1,74 @@
+"""Jitted wrapper around the sDTW Pallas kernel.
+
+Handles padding/alignment, BlockSpec plumbing, dtype promotion, and the
+interpret-mode fallback (this container is CPU-only; TPU is the target —
+``interpret=None`` auto-selects interpret mode off-TPU, per the validation
+protocol)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.distances import accum_dtype, big
+from .sdtw import _sdtw_kernel
+
+DEFAULT_BLOCK_Q = 8     # sublane-aligned query block
+DEFAULT_BLOCK_M = 512   # lane-aligned reference tile (multiple of 128)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "block_q", "block_m", "interpret"))
+def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
+                block_q: int = DEFAULT_BLOCK_Q,
+                block_m: int = DEFAULT_BLOCK_M,
+                interpret: bool | None = None):
+    """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
+
+    VMEM working set per grid cell ≈ block_q·(2·block_m + 2·N) accumulator
+    words — block shapes must be chosen so this fits (~16 MB VMEM on v5e);
+    the defaults handle N ≤ 64K comfortably.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, n = queries.shape
+    m = reference.shape[0]
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    BIG = big(acc)
+
+    if qlens is None:
+        qlens = jnp.full((b,), n, jnp.int32)
+    bp = _ceil_to(b, block_q)
+    mp = _ceil_to(max(m, block_m), block_m)
+
+    q_pad = jnp.zeros((bp, n), queries.dtype).at[:b].set(queries)
+    r_pad = jnp.zeros((1, mp), reference.dtype).at[0, :m].set(reference)
+    qlen_pad = jnp.ones((bp, 1), jnp.int32).at[:b, 0].set(qlens)
+    rlen = jnp.full((1, 1), m, jnp.int32)
+
+    grid = (bp // block_q, mp // block_m)
+    kernel = functools.partial(_sdtw_kernel, metric, n, block_m)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((1, block_m), lambda qb, t: (0, t)),
+            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), acc),
+        scratch_shapes=[pltpu.VMEM((block_q, n), acc)],
+        interpret=interpret,
+    )(q_pad, r_pad, qlen_pad, rlen)
+    return out[:b, 0]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the sDTW Pallas kernel.
+
+Deliberately the *simplest possible* JAX formulation: a sequential scan over
+rows with a sequential scan over columns (exactly Algorithm 1 plus the
+standard free-start row). No wavefront, no associative scan, no tiling —
+this is the ground truth the kernel is verified against (which is itself
+cross-checked against the numpy oracle in ``repro.core.sdtw_ref``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.distances import accum_dtype, big, pointwise_distance, sat_add
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def sdtw_ref_jnp(queries, reference, qlens=None, metric: str = "abs_diff"):
+    """Batched sDTW oracle. queries: (B, N), reference: (M,) → (B,)."""
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    BIG = big(acc)
+    b, n = queries.shape
+    if qlens is None:
+        qlens = jnp.full((b,), n, jnp.int32)
+
+    def one(query, qlen):
+        d_row0 = pointwise_distance(query[0], reference, metric)
+        best0 = jnp.where(qlen == 1, jnp.min(d_row0), BIG)
+
+        def row(carry, qi):
+            prev, best, i = carry
+            d = pointwise_distance(qi, reference, metric)
+
+            def col(s_left, xs):
+                dj, p_diag, p_up = xs
+                s = sat_add(dj, jnp.minimum(jnp.minimum(p_diag, p_up), s_left))
+                return s, s
+
+            s0 = sat_add(prev[0], d[0])
+            p_diag = prev[:-1]
+            p_up = prev[1:]
+            _, s_rest = lax.scan(col, s0, (d[1:], p_diag, p_up))
+            s = jnp.concatenate([s0[None], s_rest])
+            best = jnp.where(i == qlen - 1, jnp.minimum(best, jnp.min(s)), best)
+            return (s, best, i + 1), None
+
+        (_, best, _), _ = lax.scan(row, (d_row0, best0, jnp.int32(1)), query[1:])
+        return best
+
+    return jax.vmap(one)(queries, qlens)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel for batched sDTW — MATSA's compute subarray, TPU-native.
+
+Mapping of MATSA's mechanisms onto the TPU (DESIGN.md §2):
+
+  * MATSA column-parallelism  → VPU lanes: each kernel invocation processes a
+    (block_q × block_m) strip with the reference dimension vectorized across
+    lanes and queries across sublanes/grid.
+  * O(4M) linear data mapping → only two row vectors (prev/cur) + a boundary
+    column live in VMEM; the N×M matrix is never materialised and HBM traffic
+    is O(N + M) per query instead of O(N·M).
+  * wavefront dependency-breaking → the per-row recurrence
+        s[j] = d[j] + min(min(prev[j-1], prev[j]), s[j-1])
+    is solved in log2(block_m) lane-shift steps over the (min,+) semiring
+    (Hillis-Steele doubling), instead of MATSA's bit-serial diagonal shifts.
+  * query pipelining → the Pallas grid double-buffers the next reference tile
+    from HBM while the current one computes.
+
+Grid: (num_query_blocks, num_ref_tiles); the tile dimension is innermost and
+sequential, carrying the DP boundary column in VMEM scratch — the exact
+analogue of MATSA's inter-subarray pass gates (§III-B).
+
+Accumulates in float32 or saturating int32 (see core.distances). Exclusion
+zones are not supported here (ops.py falls back to the rowscan path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.distances import accum_dtype, big, sat_add
+
+NEG_SHIFT_FILL_A = 0  # identity element of the tropical composition: f(x) = x
+
+
+def _distance(q, r, metric):
+    d = q - r
+    if metric == "abs_diff":
+        return jnp.abs(d)
+    return d * d
+
+
+def _tropical_row_scan(a, u, big_val):
+    """Inclusive Hillis-Steele scan of f_j(x) = min(u_j, a_j + x) along lanes.
+
+    Returns (a_pref, u_pref) with u_pref[j] = s_j assuming x_init folded in by
+    the caller via min(u_pref, a_pref + x_init). Identity = (a=0, u=BIG).
+    """
+    bm = a.shape[-1]
+    shift = 1
+    while shift < bm:
+        a_sh = jnp.pad(a, ((0, 0), (shift, 0)), constant_values=0)[:, :bm]
+        u_sh = jnp.pad(u, ((0, 0), (shift, 0)),
+                       constant_values=big_val)[:, :bm]
+        u = jnp.minimum(u, sat_add(a, u_sh))
+        a = sat_add(a, a_sh)
+        shift *= 2
+    return a, u
+
+
+def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
+                 out_ref, bound_ref):
+    """One (query_block, ref_tile) cell of the grid.
+
+    q_ref:    (block_q, N)   queries (VMEM)
+    r_ref:    (1, block_m)   reference tile (VMEM)
+    qlen_ref: (block_q, 1)   true query lengths
+    rlen_ref: (1, 1)         true reference length
+    out_ref:  (block_q, 1)   running per-query best (min over last valid row)
+    bound_ref:(block_q, N)   scratch: boundary column from the previous tile
+    """
+    t = pl.program_id(1)
+    acc = out_ref.dtype
+    BIG = big(acc)
+    bq = q_ref.shape[0]
+
+    r = r_ref[...].astype(acc)                       # (1, bm)
+    qlen = qlen_ref[...].astype(jnp.int32)           # (bq, 1)
+    rlen = rlen_ref[0, 0]
+    j_global = t * block_m + lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    col_ok = j_global < rlen                         # (1, bm)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, BIG)
+
+    best0 = out_ref[...]                             # (bq, 1)
+
+    def row_body(i, carry):
+        prev, b_im1, best = carry                    # (bq,bm), (bq,1), (bq,1)
+        qi = jax.lax.dynamic_slice_in_dim(q_ref[...], i, 1, axis=1).astype(acc)
+        d = _distance(qi, r, metric)                 # (bq, bm) broadcast
+        d = jnp.where(col_ok, d, BIG)
+
+        # Boundary from the previous tile, row i (read BEFORE overwrite).
+        b_row = jax.lax.dynamic_slice_in_dim(bound_ref[...], i, 1, axis=1)
+        b_row = jnp.where(t == 0, BIG, b_row)        # (bq, 1)
+
+        # prev shifted right by one lane; lane 0 takes the diagonal boundary.
+        prev_sh = jnp.pad(prev, ((0, 0), (1, 0)),
+                          constant_values=0)[:, :block_m]
+        prev_sh = jnp.where(
+            lax.broadcasted_iota(jnp.int32, prev.shape, 1) == 0, b_im1, prev_sh)
+        m = jnp.minimum(prev_sh, prev)               # min(S[i-1,j-1], S[i-1,j])
+
+        u = sat_add(d, m)
+        a = d
+        a_p, u_p = _tropical_row_scan(a, u, BIG)
+        s_rec = jnp.minimum(u_p, sat_add(a_p, b_row))
+        s = jnp.where(i == 0, d, s_rec)              # free-start row
+        s = jnp.where(col_ok, s, BIG)
+
+        # Record min over the last valid row of each query.
+        row_min = jnp.min(s, axis=1, keepdims=True)
+        best = jnp.where(i == qlen - 1, jnp.minimum(best, row_min), best)
+
+        # Persist this tile's last column as the next tile's boundary.
+        new_b = s[:, block_m - 1:block_m]
+        bound_new = jax.lax.dynamic_update_slice_in_dim(
+            bound_ref[...], new_b, i, axis=1)
+        bound_ref[...] = bound_new
+        return s, b_row, best
+
+    prev0 = jnp.full((bq, block_m), BIG, acc)
+    b0 = jnp.full((bq, 1), BIG, acc)
+    _, _, best = lax.fori_loop(0, n, row_body, (prev0, b0, best0))
+    out_ref[...] = best

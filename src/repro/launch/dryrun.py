@@ -1,0 +1,285 @@
+# The dry-run needs 512 placeholder host devices BEFORE any jax init —
+# these two lines must stay the very first statements of this module.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell on
+# the production mesh and record memory/cost/collective analysis for the
+# roofline (EXPERIMENTS.md §Dry-run / §Roofline). CPU devices stand in for
+# TPU chips; compilation exercises the full SPMD partitioner, so sharding
+# mismatches / OOMs / unsupported collectives fail HERE, not on the fleet.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+#       --shape train_4k [--multi-pod] [--out experiments/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, all_archs, get_arch
+from repro.distributed import Axes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, model_flops, roofline
+from repro.launch.specs import build_cell
+
+
+def _memory_record(compiled) -> dict:
+    try:
+        mem = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # unsupported on some backends
+        return {"error": str(e)}
+
+
+def _acct_extrapolate(cfg, shape, axes, overrides, serve_param_mode,
+                      kv_layout, mesh):
+    """Two-point extrapolated accounting for expensive cells.
+
+    Compile the model UNROLLED at `unit` and `2·unit` layers (unit = one
+    hybrid group, else one layer); with U_a = out + body and
+    U_b = out + 2·body, the full-depth totals are
+    total = (2−s)·U_a·… i.e. out + s·body, body = U_b − U_a, out = 2U_a − U_b,
+    where s = n_layers/unit. Applies to flops, bytes-accessed, and per-type
+    collective bytes. Exact up to XLA fusing "out" slightly differently
+    between the two compiles; records carry accounting="extrapolated".
+    """
+    unit = cfg.attn_every if cfg.family == "hybrid" else 1
+    scale = cfg.n_layers // unit
+
+    def one(n_layers):
+        c2 = dataclasses.replace(cfg, n_layers=n_layers)
+        with mesh:
+            cell = build_cell(c2, shape, axes, overrides,
+                              serve_param_mode=serve_param_mode,
+                              kv_layout=kv_layout)
+            compiled = cell.fn.lower(*cell.args).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)), coll)
+
+    fa, ba, ca = one(unit)
+    fb, bb, cb = one(2 * unit)
+
+    def extra(a, b):
+        return max(0.0, (2 - scale) * a + (scale - 1) * b)
+
+    flops = extra(fa, fb)
+    bytes_acc = extra(ba, bb)
+    coll = {"bytes": {k: int(extra(ca["bytes"][k], cb["bytes"][k]))
+                      for k in ca["bytes"]},
+            "counts": {k: int(extra(ca["counts"][k], cb["counts"][k]))
+                       for k in ca["counts"]}}
+    coll["total_bytes"] = sum(coll["bytes"].values())
+    return flops, bytes_acc, coll
+
+
+def dry_run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+                 run_overrides=None, mesh=None, save_hlo: str = None,
+                 serve_param_mode: str = "train",
+                 kv_layout: str = "dh", acct: str = "unrolled",
+                 microbatches: int = 1) -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "skipped", "reason": None}
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        rec["reason"] = ("full-attention arch: no sub-quadratic path at 500k "
+                        "context (DESIGN.md §Arch-applicability)")
+        return rec
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    axes = Axes.from_mesh(mesh)
+    n_chips = mesh.devices.size
+    # The roofline table reads single-pod artifacts only; the multi-pod pass
+    # proves the "pod" axis shards — scanned layers keep its compiles cheap
+    # (accounting there is not consumed).
+    if multi_pod and (run_overrides is None
+                      or "scan_layers" not in run_overrides):
+        run_overrides = dict(run_overrides or {}, scan_layers=True)
+    tcfg = None
+    if microbatches > 1:
+        from repro.train import TrainConfig
+        tcfg = TrainConfig(microbatches=microbatches)
+        rec["microbatches"] = microbatches
+    try:
+        t0 = time.time()
+        # Accounting pass: loop-free attention ("dense") so HloCostAnalysis
+        # sees every flop — the chunked production path hides its KV-block
+        # loop body behind a while (counted once). Dense computes the same
+        # full S² rectangle as chunked, so the count matches the production
+        # baseline's true flops (incl. the masked-half waste).
+        acct_overrides = dict(run_overrides or {})
+        acct_overrides.setdefault("attn_mode", "dense")
+        hlo = None
+        if acct == "extrapolated" and not acct_overrides.get("scan_layers"):
+            flops, bytes_acc, coll = _acct_extrapolate(
+                cfg, shape, axes, acct_overrides, serve_param_mode,
+                kv_layout, mesh)
+            mem_rec = {"note": "from memory_analysis_scanned"}
+            description = f"{shape.kind}_step {cfg.name} {shape.name}"
+            mem_scanned = None
+        else:
+            with mesh:
+                cell = build_cell(cfg, shape, axes, acct_overrides,
+                                  tcfg=tcfg,
+                                  serve_param_mode=serve_param_mode,
+                                  kv_layout=kv_layout)
+                lowered = cell.fn.lower(*cell.args)
+                compiled = lowered.compile()
+            cost = compiled.cost_analysis() or {}
+            flops = float(cost.get("flops", 0.0))
+            bytes_acc = float(cost.get("bytes accessed", 0.0))
+            mem_rec = _memory_record(compiled)
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            description = cell.description
+            mem_scanned = dict(mem_rec) if \
+                (run_overrides or {}).get("scan_layers") else None
+
+        # Memory proof-of-fit uses the production (scanned-layers) form:
+        # the unrolled variant stacks per-layer cache/activation temps that
+        # scan+donation elide.
+        if mem_scanned is None:
+            scanned_overrides = dict(run_overrides or {}, scan_layers=True)
+            with mesh:
+                cell_s = build_cell(cfg, shape, axes, scanned_overrides,
+                                    tcfg=tcfg,
+                                    serve_param_mode=serve_param_mode,
+                                    kv_layout=kv_layout)
+                compiled_s = cell_s.fn.lower(*cell_s.args).compile()
+            mem_scanned = _memory_record(compiled_s)
+            if hlo is None:
+                hlo = compiled_s.as_text()
+        fits = None
+        if isinstance(mem_scanned.get("temp_bytes"), int):
+            live = (mem_scanned.get("argument_bytes", 0)
+                    + mem_scanned.get("output_bytes", 0)
+                    + mem_scanned.get("temp_bytes", 0)
+                    - mem_scanned.get("alias_bytes", 0))
+            fits = bool(live <= 16e9)
+            mem_scanned["live_bytes"] = int(live)
+            mem_scanned["fits_16gb_hbm"] = fits
+
+        if save_hlo and hlo is not None:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        mf = model_flops(cfg, shape)
+        terms = roofline(flops, bytes_acc, coll["total_bytes"], mf, n_chips)
+        rec.update(
+            status="ok",
+            accounting=acct,
+            description=description,
+            compile_s=round(time.time() - t0, 2),
+            cost_analysis={"flops": flops, "bytes accessed": bytes_acc},
+            memory_analysis=mem_rec,
+            memory_analysis_scanned=mem_scanned,
+            collectives=coll,
+            roofline=terms.to_dict(),
+            hlo_bytes=len(hlo) if hlo else 0,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo")
+    ap.add_argument("--attn-mode", default=None,
+                    help="override attention mode (dense|chunked|triangular)")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--serve-params", default="train",
+                    choices=["train", "serve"],
+                    help="decode/prefill param sharding: 2-D (train) or "
+                         "TP-only (serve)")
+    ap.add_argument("--kv-layout", default="dh", choices=["dh", "seq"],
+                    help="model-axis placement for indivisible-kv caches")
+    ap.add_argument("--acct", default="unrolled",
+                    choices=["unrolled", "extrapolated"],
+                    help="flop/collective accounting: full unrolled compile "
+                         "or 2-point layer extrapolation (fast)")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.attn_mode:
+        overrides["attn_mode"] = args.attn_mode
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.pad_heads:
+        overrides["pad_heads"] = True
+
+    cells = []
+    if args.all:
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_err = n_skip = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for a, s in cells:
+            rec = dry_run_cell(a, s, multi_pod, overrides or None, mesh=mesh,
+                               save_hlo=args.save_hlo,
+                               serve_param_mode=args.serve_params,
+                               kv_layout=args.kv_layout, acct=args.acct,
+                               microbatches=args.microbatches or 1)
+            fn = os.path.join(args.out, f"{mesh_name}__{a}__{s}.json")
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+            tag = rec["status"].upper()
+            n_ok += tag == "OK"
+            n_err += tag == "ERROR"
+            n_skip += tag == "SKIPPED"
+            extra = ""
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                extra = (f"compile={rec['compile_s']}s "
+                         f"dom={r['dominant']} "
+                         f"terms(c/m/x)={r['compute_s']:.2e}/"
+                         f"{r['memory_s']:.2e}/{r['collective_s']:.2e}s "
+                         f"useful={r['useful_flops_ratio']:.2f}")
+            elif rec["status"] == "error":
+                extra = rec["error"][:160]
+            print(f"[{tag:7s}] {mesh_name} {a:24s} {s:12s} {extra}",
+                  flush=True)
+    print(f"done: ok={n_ok} err={n_err} skipped={n_skip}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

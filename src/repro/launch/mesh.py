@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — dryrun.py must set
+``--xla_force_host_platform_device_count`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; "pod" is the pure-DP
+    cross-pod axis (lowest bandwidth → hierarchical gradient reduction)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / examples), e.g. ((1, 2), ("data", "model"))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,110 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --preset reduced --steps 50 --mesh 1x1 --data tsa --ckpt /tmp/ck
+
+On the container this runs reduced configs on the single CPU device; on a
+fleet the same entrypoint runs the full config on the production mesh (the
+mesh is just a flag). Fault tolerance (checkpoint/restart, stragglers) comes
+from repro.ft.TrainingRunner; the data pipeline is deterministic and
+shard-aware so restarts resume exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_arch
+from repro.data import DataConfig, SyntheticLM, TSAFilteredLM
+from repro.distributed import Axes
+from repro.ft import FailureInjector, RunnerConfig, TrainingRunner
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import tree_shardings
+from repro.models import RunConfig, init_lm
+from repro.optim import OptConfig
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+
+def build(arch: str, preset: str, mesh_spec: str, *, seq_len: int,
+          global_batch: int, lr: float, steps: int, microbatches: int,
+          compression: str | None, data_kind: str, seed: int):
+    cfg = get_arch(arch)
+    if preset == "reduced":
+        cfg = cfg.reduced()
+    mesh = None
+    if mesh_spec and mesh_spec != "1x1":
+        dims = tuple(int(x) for x in mesh_spec.split("x"))
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, names)
+    axes = Axes.from_mesh(mesh)
+    run = RunConfig(remat="none" if preset == "reduced" else "full",
+                    attn_mode="dense" if seq_len <= 2048 else "chunked")
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=lr, warmup_steps=max(2, steps // 20),
+                      total_steps=steps),
+        microbatches=microbatches,
+        grad_compression=compression)
+    dcfg = DataConfig(seed=seed, seq_len=seq_len, global_batch=global_batch,
+                      vocab=cfg.vocab,
+                      embeddings_dim=cfg.d_model if cfg.frontend == "stub"
+                      else 0)
+    data = (TSAFilteredLM(dcfg) if data_kind == "tsa" else SyntheticLM(dcfg))
+
+    params = init_lm(cfg, jax.random.PRNGKey(seed))
+    state = init_train_state(cfg, params, tcfg)
+    if mesh is not None:
+        shardings = tree_shardings(
+            jax.eval_shape(lambda: state), axes, "train")
+        state = jax.tree.map(jax.device_put, state, shardings)
+    step = jax.jit(make_train_step(cfg, run, tcfg, axes))
+    return cfg, data, state, step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--preset", default="reduced",
+                    choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="1x1", help="e.g. 4x2 or 2x16x16")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default=None,
+                    choices=[None, "int8_ef"])
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "tsa"])
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject failures at these steps (FT demo)")
+    args = ap.parse_args()
+
+    cfg, data, state, step = build(
+        args.arch, args.preset, args.mesh, seq_len=args.seq_len,
+        global_batch=args.global_batch, lr=args.lr, steps=args.steps,
+        microbatches=args.microbatches, compression=args.compression,
+        data_kind=args.data, seed=args.seed)
+
+    runner = TrainingRunner(
+        step, data, state, args.ckpt,
+        RunnerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every),
+        injector=FailureInjector(tuple(args.fail_at)) if args.fail_at
+        else None)
+    out = runner.run()
+    first, last = out["metrics"][0], out["metrics"][-1]
+    print(json.dumps({
+        "arch": cfg.name, "steps": len(out["metrics"]),
+        "restarts": out["restarts"], "stragglers": out["stragglers"],
+        "first_loss": round(first["loss"], 4),
+        "last_loss": round(last["loss"], 4),
+    }))
+
+
+if __name__ == "__main__":
+    main()

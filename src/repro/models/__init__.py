@@ -1,0 +1,5 @@
+from .model import (DEFAULT_RUN, RunConfig, decode_step, forward, init_cache,
+                    init_lm, loss_fn, prefill)
+
+__all__ = ["RunConfig", "DEFAULT_RUN", "init_lm", "forward", "loss_fn",
+           "init_cache", "prefill", "decode_step"]

@@ -1,0 +1,247 @@
+"""GQA attention: training/prefill (memory-bounded online softmax) + decode.
+
+Three training-path modes (selected per shape in the launch config; all are
+numerically identical and oracle-checked against each other):
+
+  * "dense"      — full S×S masked einsum. Cheapest HLO, fine for S ≤ 4k.
+  * "chunked"    — lax.scan over KV chunks with online softmax (flash-style
+                   rescaling). Memory O(S·ck) instead of O(S²); computes the
+                   full rectangle, so ~2× the causal FLOPs (the masked half
+                   is wasted) — the baseline the §Perf log hillclimbs.
+  * "triangular" — python-unrolled query blocks with static prefix KV slices:
+                   exact causal FLOPs, bigger HLO. The beyond-baseline option.
+
+Decode: single-token query against a (possibly sequence-sharded) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import apply_rope, normal_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (d, h * dh), d, dtype),
+        "wk": normal_init(ks[1], (d, hkv * dh), d, dtype),
+        "wv": normal_init(ks[2], (d, hkv * dh), d, dtype),
+        "wo": normal_init(ks[3], (h * dh, d), h * dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions, axes):
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if axes is not None:
+        tq = axes.tp_if_divisible(h)
+        tkv = axes.tp_if_divisible(hkv)
+        q = axes.constrain(q, "dp", None, tq, None)
+        k = axes.constrain(k, "dp", None, tkv, None)
+        v = axes.constrain(v, "dp", None, tkv, None)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,H,D), k: (B,Sk,Hkv,D) → scores (B,Hkv,G,Sq,Sk) fp32."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_values(probs, v):
+    """probs: (B,Hkv,G,Sq,Sk), v: (B,Sk,Hkv,D) → (B,Sq,H,D)."""
+    b, hkv, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hkv * g, -1)
+
+
+def _dense_attention(q, k, v, scale):
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scores = _gqa_scores(q, k, scale)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(probs, v)
+
+
+def _chunked_attention(q, k, v, scale, chunk: int):
+    """Online-softmax scan over KV chunks (memory-bounded)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    n_chunks = sk // chunk
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        scores = _gqa_scores(q, kj, scale)                  # (B,Hkv,G,Sq,ck)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vj)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), v.dtype)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+
+
+def _triangular_attention(q, k, v, scale, chunk: int):
+    """Python-unrolled query blocks with static causal-prefix KV slices:
+    exact causal FLOPs (no masked-half waste)."""
+    b, sq, h, dh = q.shape
+    outs = []
+    for i in range(sq // chunk):
+        qi = lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+        kv_end = (i + 1) * chunk
+        ki = lax.slice_in_dim(k, 0, kv_end, axis=1)
+        vi = lax.slice_in_dim(v, 0, kv_end, axis=1)
+        scores = _gqa_scores(qi, ki, scale)
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = jnp.arange(kv_end)
+        scores = jnp.where(qpos[:, None] >= kpos[None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        outs.append(_gqa_values(probs, vi))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _pad_heads_for_tp(q, k, v, cfg, axes):
+    """Pad KV heads (and q-head groups with them) up to TP divisibility.
+
+    GSPMD cannot shard phi3's 40/10 heads on a 16-way axis and falls back to
+    REPLICATING attention across the model axis (16× flops — measured in the
+    dry-run baseline, useful-ratio 0.09). Zero-padding to the next multiple
+    costs ≤1.6× on the padded heads but shards perfectly. Padded heads are
+    appended at the tail of the kv-major layout, so slicing the output back
+    is a contiguous cut.
+    """
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    tp = axes.tp_size
+    g = h // hkv
+    hkv_p = -(-hkv // tp) * tp
+    qg = q.reshape(b, s, hkv, g, dh)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, hkv_p - hkv), (0, 0), (0, 0)))
+    q = qg.reshape(b, s, hkv_p * g, dh)
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, hkv_p - hkv), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, hkv_p - hkv), (0, 0)))
+    q = axes.constrain(q, "dp", None, "tp", None)
+    k = axes.constrain(k, "dp", None, "tp", None)
+    v = axes.constrain(v, "dp", None, "tp", None)
+    return q, k, v, (hkv, hkv_p, g)
+
+
+def _unpad_heads(out, pad_info):
+    hkv, hkv_p, g = pad_info
+    b, s, _, dh = out.shape
+    out = out.reshape(b, s, hkv_p, g, dh)[:, :, :hkv]
+    return out.reshape(b, s, hkv * g, dh)
+
+
+def attention(params, cfg, x, positions, axes=None, mode: str = "dense",
+              chunk: int = 1024, pad_heads: bool = False):
+    """Causal self-attention over a full sequence (train / prefill)."""
+    dh = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(dh)
+    q, k, v = _project_qkv(params, cfg, x, positions, axes)
+    kv_for_cache = (k, v)   # real (unpadded) heads — what prefill stores
+    pad_info = None
+    if (pad_heads and axes is not None and axes.tp
+            and (cfg.n_heads % axes.tp_size or
+                 cfg.n_kv_heads % axes.tp_size)):
+        q, k, v, pad_info = _pad_heads_for_tp(q, k, v, cfg, axes)
+    s = x.shape[1]
+    chunk = min(chunk, s)
+    if mode == "dense" or s <= chunk:
+        out = _dense_attention(q, k, v, scale)
+    else:
+        pad = (-s) % chunk  # padded tail is "future" → causally masked out
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if mode == "chunked":
+            out = _chunked_attention(q, k, v, scale, chunk)
+        elif mode == "triangular":
+            out = _triangular_attention(q, k, v, scale, chunk)
+        else:
+            raise ValueError(f"unknown attention mode {mode!r}")
+        out = out[:, :s]
+    if pad_info is not None:
+        out = _unpad_heads(out, pad_info)
+    if axes is not None:
+        out = axes.constrain(out, "dp", None, axes.tp_if_divisible(cfg.n_heads),
+                             None)
+    return out.reshape(*x.shape[:2], -1) @ params["wo"], kv_for_cache
+
+
+def decode_attention(params, cfg, x, cache_k, cache_v, pos, axes=None):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, Hkv, Dh); pos: (B,) current lengths.
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(dh)
+    q, k, v = _project_qkv(params, cfg, x, pos[:, None], axes)
+    # Insert the new KV at position `pos` (per-example).
+    # Scatter the new token's K/V in place (only B rows written — the cache
+    # buffer is loop-carried and donated, so XLA updates it in situ instead
+    # of rewriting/copying the full [B,S,Hkv,Dh] cache each step).
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    # fp8/int8 caches: compute scores in the query dtype.
+    scores = _gqa_scores(q, cache_k.astype(q.dtype), scale)  # (B,Hkv,G,1,S)
+    kpos = jnp.arange(cache_k.shape[1])
+    mask = kpos[None, :] <= pos[:, None]                   # (B, S)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_values(probs, cache_v.astype(q.dtype))
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, cache_k, cache_v

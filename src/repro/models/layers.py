@@ -1,0 +1,91 @@
+"""Shared neural-net layers (pure JAX, pytree params, no framework deps).
+
+Numerics policy (DESIGN.md §7): params fp32, compute bf16 (cast at block
+entry), reductions/norms in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(1, fan_in))
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def rms_norm(x, weight, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, axes=None):
+    """SwiGLU FF. TP: gate/up column-parallel, down row-parallel."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    if axes is not None:
+        h = axes.constrain(h, "dp", None, "tp")
+    return h @ w_down
+
+
+def init_swiglu(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), d_model, dtype),
+        "w_down": normal_init(k3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama-style, rotate-half).
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab sharded over the TP axis).
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": 0.02 * jax.random.normal(key, (vocab, d_model), dtype)}
+
+
+def embed(params, tokens, compute_dtype=jnp.bfloat16):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params, x, axes=None):
+    """Logits in fp32 (vocab-sharded over TP)."""
+    logits = x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T
+    if axes is not None:
+        logits = axes.constrain(logits, "dp", None, "tp")
+    return logits
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Token-mean cross entropy; logits fp32 (B, S, V), labels (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

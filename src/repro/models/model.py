@@ -1,0 +1,435 @@
+"""Model zoo: assembles any ArchConfig into a trainable/servable LM.
+
+Families: dense (llama/phi/qwen/granite), moe (qwen3/granite MoE), ssm
+(mamba2), hybrid (zamba2: SSM backbone + one shared attention block invoked
+every ``attn_every`` layers), audio/vlm (dense backbone, stub frontend —
+inputs may be precomputed embeddings instead of token ids).
+
+All layer stacks run under ``lax.scan`` over stacked parameters (bounded HLO
+for 88-layer configs — required for the 80-compile dry-run) with optional
+rematerialisation. Compute in bf16, params fp32 (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (cross_entropy_loss, embed, init_embedding, init_swiglu,
+                     rms_norm, swiglu, unembed)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs (orthogonal to the architecture)."""
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"          # none | full | dots
+    attn_mode: str = "dense"     # dense | chunked | triangular
+    attn_chunk: int = 1024
+    cache_dtype: Any = jnp.bfloat16
+    # scan_layers=False unrolls the layer stack. The dry-run uses the
+    # unrolled form because XLA's HloCostAnalysis counts a while-loop body
+    # ONCE (trip count unknown) — with lax.scan the reported flops/collective
+    # bytes would be ~n_layers× too low. Production training keeps scan.
+    scan_layers: bool = True
+    # Zero-pad attention heads to TP divisibility (§Perf lever for archs
+    # whose head counts don't divide the model axis — see attention.py).
+    pad_heads: bool = False
+
+    def checkpoint(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "full":
+            return jax.checkpoint(fn)
+        if self.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        raise ValueError(self.remat)
+
+
+DEFAULT_RUN = RunConfig()
+
+
+def _scan(run: RunConfig, body, carry, xs, length: int):
+    """lax.scan or an unrolled python loop with identical semantics
+    (carry, stacked ys)."""
+    if run.scan_layers:
+        return lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda p: p[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg):
+    """One layer's params (structure depends on family)."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        return {"ssm": ssm_mod.init_ssm(ks[0], cfg),
+                "ln": jnp.ones((d,), jnp.float32)}
+    block = {"attn": attn_mod.init_attention(ks[0], cfg),
+             "ln1": jnp.ones((d,), jnp.float32),
+             "ln2": jnp.ones((d,), jnp.float32)}
+    if cfg.has_moe:
+        block["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        block["mlp"] = init_swiglu(ks[1], d, cfg.d_ff)
+    return block
+
+
+def _init_shared_block(key, cfg):
+    """Zamba2's shared attention+FF block (one set of weights)."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {"attn": attn_mod.init_attention(ks[0], cfg),
+            "mlp": init_swiglu(ks[1], d, cfg.d_ff),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32)}
+
+
+def init_lm(cfg, key):
+    k_emb, k_blocks, k_shared, k_unemb = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params = {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(block_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == "hybrid":
+        params["shared"] = _init_shared_block(k_shared, cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(k_unemb, cfg.vocab, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, run, axes, bp, x, positions):
+    h, _ = attn_mod.attention(bp["attn"], cfg, rms_norm(x, bp["ln1"], cfg.norm_eps),
+                              positions, axes, run.attn_mode, run.attn_chunk,
+                              run.pad_heads)
+    x = x + h
+    if cfg.has_moe:
+        h, aux = moe_mod.moe_mlp(bp["moe"], cfg,
+                                 rms_norm(x, bp["ln2"], cfg.norm_eps), axes)
+    else:
+        h = swiglu(rms_norm(x, bp["ln2"], cfg.norm_eps), **bp["mlp"], axes=axes)
+        aux = jnp.float32(0.0)
+    return x + h, aux
+
+
+def _ssm_block(cfg, run, axes, bp, x):
+    return x + ssm_mod.ssm_forward(bp["ssm"], cfg,
+                                   rms_norm(x, bp["ln"], cfg.norm_eps), axes)
+
+
+def _shared_block(cfg, run, axes, sp, x, positions):
+    h, _ = attn_mod.attention(sp["attn"], cfg, rms_norm(x, sp["ln1"], cfg.norm_eps),
+                              positions, axes, run.attn_mode, run.attn_chunk,
+                              run.pad_heads)
+    x = x + h
+    h = swiglu(rms_norm(x, sp["ln2"], cfg.norm_eps), **sp["mlp"], axes=axes)
+    return x + h
+
+
+def _cast_params(params, dtype):
+    """bf16 compute copies of the fp32 master params (cast is differentiable:
+    grads accumulate back into fp32)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
+
+
+def _embed_inputs(cfg, params, batch, run):
+    if "embeddings" in batch:
+        x = batch["embeddings"].astype(run.compute_dtype)
+    else:
+        x = embed(params["embed"], batch["tokens"], run.compute_dtype)
+    return x
+
+
+def forward(cfg, params, batch, axes=None, run: RunConfig = DEFAULT_RUN):
+    """Full-sequence forward → (logits fp32 (B,S,V), aux_loss)."""
+    params = _cast_params(params, run.compute_dtype)
+    x = _embed_inputs(cfg, params, batch, run)
+    b, s, _ = x.shape
+    if axes is not None:
+        x = axes.constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "ssm":
+        def body(x, bp):
+            return _ssm_block(cfg, run, axes, bp, x), None
+        x, _ = _scan(run, run.checkpoint(body), x, params["blocks"],
+                     cfg.n_layers)
+        aux = jnp.float32(0.0)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        gblocks = jax.tree.map(
+            lambda p: p.reshape(groups, cfg.attn_every, *p.shape[1:]),
+            params["blocks"])
+        shared = params["shared"]
+
+        def group_body(x, gp):
+            x = _shared_block(cfg, run, axes, shared, x, positions)
+            def inner(x, bp):
+                return _ssm_block(cfg, run, axes, bp, x), None
+            x, _ = _scan(run, inner, x, gp, cfg.attn_every)
+            return x, None
+        x, _ = _scan(run, run.checkpoint(group_body), x, gblocks, groups)
+        aux = jnp.float32(0.0)
+    else:
+        def body(carry, bp):
+            x, aux = carry
+            x, a = _dense_block(cfg, run, axes, bp, x, positions)
+            return (x, aux + a), None
+        (x, aux), _ = _scan(run, run.checkpoint(body),
+                            (x, jnp.float32(0.0)), params["blocks"],
+                            cfg.n_layers)
+        aux = aux / cfg.n_layers
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x, axes)
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch, axes=None, run: RunConfig = DEFAULT_RUN):
+    logits, aux = forward(cfg, params, batch, axes, run)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, run: RunConfig = DEFAULT_RUN):
+    """Empty serving cache sized for `max_len` context."""
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def stacked_ssm():
+        st = ssm_mod.init_ssm_state(cfg, batch, run.cache_dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), st)
+
+    if cfg.family == "ssm":
+        cache["ssm"] = stacked_ssm()
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        cache["ssm"] = stacked_ssm()
+        cache["shared_k"] = jnp.zeros((groups, batch, max_len, hkv, dh),
+                                      run.cache_dtype)
+        cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    else:
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, hkv, dh),
+                               run.cache_dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def decode_step(cfg, params, tokens, cache, axes=None,
+                run: RunConfig = DEFAULT_RUN):
+    """One decoding step. tokens: (B,) int32 → (logits (B,V), new cache)."""
+    params = _cast_params(params, run.compute_dtype)
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens[:, None], run.compute_dtype)
+    if axes is not None:
+        x = axes.constrain(x, "dp", None, None)
+
+    # Caches are loop-CARRIED (not scanned xs/ys): with donated buffers the
+    # while-loop updates them in place — no cache-sized double buffers. Layer
+    # params/cache slices are indexed by the loop counter.
+    import numpy as np
+
+    def at(tree, l):
+        return jax.tree.map(lambda p: p[l], tree)
+
+    def put(tree, sub, l):
+        return jax.tree.map(lambda p, s: p.at[l].set(s), tree, sub)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def ssm_at(x, ssm_all, l):
+            bp = at(params["blocks"], l)
+            st = at(ssm_all, l)
+            xin = rms_norm(x, bp["ln"], cfg.norm_eps)
+            h, st2 = ssm_mod.ssm_decode_step(bp["ssm"], cfg, xin, st, axes)
+            return x + h, put(ssm_all, st2, l)
+
+        if cfg.family == "ssm":
+            def body(carry, l):
+                x, ssm_all = carry
+                x, ssm_all = ssm_at(x, ssm_all, l)
+                return (x, ssm_all), None
+            (x, new_ssm), _ = _scan(run, body, (x, cache["ssm"]),
+                                    np.arange(cfg.n_layers), cfg.n_layers)
+            cache = dict(cache, ssm=new_ssm, pos=pos + 1)
+        else:
+            groups = cfg.n_layers // cfg.attn_every
+            shared = params["shared"]
+
+            def group_body(carry, g):
+                x, ssm_all, k_all, v_all = carry
+                xin = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                h, ck, cv = attn_mod.decode_attention(
+                    shared["attn"], cfg, xin, k_all[g], v_all[g], pos, axes)
+                k_all = k_all.at[g].set(ck)
+                v_all = v_all.at[g].set(cv)
+                x = x + h
+                x = x + swiglu(rms_norm(x, shared["ln2"], cfg.norm_eps),
+                               **shared["mlp"], axes=axes)
+
+                def inner(carry2, j):
+                    x2, ssm_all2 = carry2
+                    x2, ssm_all2 = ssm_at(x2, ssm_all2,
+                                          g * cfg.attn_every + j)
+                    return (x2, ssm_all2), None
+                (x, ssm_all), _ = _scan(run, inner, (x, ssm_all),
+                                        np.arange(cfg.attn_every),
+                                        cfg.attn_every)
+                return (x, ssm_all, k_all, v_all), None
+
+            (x, new_ssm, new_k, new_v), _ = _scan(
+                run, group_body,
+                (x, cache["ssm"], cache["shared_k"], cache["shared_v"]),
+                np.arange(groups), groups)
+            cache = dict(cache, ssm=new_ssm, shared_k=new_k, shared_v=new_v,
+                         pos=pos + 1)
+    else:
+        def body(carry, l):
+            x, aux, k_all, v_all = carry
+            bp = at(params["blocks"], l)
+            xin = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            h, ck, cv = attn_mod.decode_attention(bp["attn"], cfg, xin,
+                                                  k_all[l], v_all[l], pos,
+                                                  axes)
+            k_all = k_all.at[l].set(ck)
+            v_all = v_all.at[l].set(cv)
+            x = x + h
+            xin = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.has_moe:
+                h, a = moe_mod.moe_mlp(bp["moe"], cfg, xin, axes)
+                aux = aux + a
+            else:
+                h = swiglu(xin, **bp["mlp"], axes=axes)
+            return (x + h, aux, k_all, v_all), None
+
+        (x, _, new_k, new_v), _ = _scan(
+            run, body, (x, jnp.float32(0.0), cache["k"], cache["v"]),
+            np.arange(cfg.n_layers), cfg.n_layers)
+        cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x, axes)[:, 0]
+    return logits, cache
+
+
+def prefill(cfg, params, batch, max_len: int, axes=None,
+            run: RunConfig = DEFAULT_RUN):
+    """Process a full prompt; returns (last-token logits (B,V), cache).
+
+    For attention archs the KV cache is built by re-projecting K/V per layer
+    (same weights, one pass); SSM archs carry their recurrent state."""
+    params = _cast_params(params, run.compute_dtype)
+    x = _embed_inputs(cfg, params, batch, run)
+    b, s, _ = x.shape
+    if axes is not None:
+        x = axes.constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cache = init_cache(cfg, b, max_len, run)
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def pad_kv(k):
+        return jnp.zeros((b, max_len, hkv, dh), run.cache_dtype
+                         ).at[:, :s].set(k.astype(run.cache_dtype))
+
+    if cfg.family == "ssm":
+        def body(x, xs_):
+            bp, st = xs_
+            xin = rms_norm(x, bp["ln"], cfg.norm_eps)
+            h, st2 = ssm_mod.ssm_forward(bp["ssm"], cfg, xin, axes, st)
+            return x + h, st2
+        x, new_ssm = _scan(run, run.checkpoint(body), x,
+                           (params["blocks"], cache["ssm"]), cfg.n_layers)
+        cache = dict(cache, ssm=new_ssm)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        gblocks = jax.tree.map(
+            lambda p: p.reshape(groups, cfg.attn_every, *p.shape[1:]),
+            params["blocks"])
+        gssm = jax.tree.map(
+            lambda p: p.reshape(groups, cfg.attn_every, *p.shape[1:]),
+            cache["ssm"])
+        shared = params["shared"]
+
+        def group_body(x, xs_):
+            gp, st = xs_
+            xin = rms_norm(x, shared["ln1"], cfg.norm_eps)
+            h, kv = attn_mod.attention(shared["attn"], cfg, xin, positions,
+                                       axes, run.attn_mode, run.attn_chunk,
+                                       run.pad_heads)
+            x = x + h
+            x = x + swiglu(rms_norm(x, shared["ln2"], cfg.norm_eps),
+                           **shared["mlp"], axes=axes)
+            def inner2(x, xs2):
+                bp, st_l = xs2
+                xin = rms_norm(x, bp["ln"], cfg.norm_eps)
+                h, st2 = ssm_mod.ssm_forward(bp["ssm"], cfg, xin, axes, st_l)
+                return x + h, st2
+            x, st2 = _scan(run, inner2, x, (gp, st), cfg.attn_every)
+            return x, (st2, pad_kv(kv[0]), pad_kv(kv[1]))
+
+        x, (new_ssm, ks, vs) = _scan(run, run.checkpoint(group_body), x,
+                                     (gblocks, gssm), groups)
+        new_ssm = jax.tree.map(
+            lambda p: p.reshape(cfg.n_layers, *p.shape[2:]), new_ssm)
+        cache = dict(cache, ssm=new_ssm, shared_k=ks, shared_v=vs)
+    else:
+        def body_kv(carry, bp):
+            x, aux = carry
+            xin = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            h, (kk, vv) = attn_mod.attention(bp["attn"], cfg, xin, positions,
+                                             axes, run.attn_mode,
+                                             run.attn_chunk, run.pad_heads)
+            x = x + h
+            xin = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.has_moe:
+                h, a = moe_mod.moe_mlp(bp["moe"], cfg, xin, axes)
+                aux = aux + a
+            else:
+                h = swiglu(xin, **bp["mlp"], axes=axes)
+                a = jnp.float32(0.0)
+            return (x + h, aux + a), (pad_kv(kk), pad_kv(vv))
+        (x, _), (ks, vs) = _scan(run, run.checkpoint(body_kv),
+                                 (x, jnp.float32(0.0)), params["blocks"],
+                                 cfg.n_layers)
+        cache = dict(cache, k=ks, v=vs)
+
+    cache = dict(cache, pos=jnp.full((b,), s, jnp.int32))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["unembed"] if "unembed" in params else params["embed"]
+    logits = unembed(table, x[:, -1:], axes)[:, 0]
+    return logits, cache

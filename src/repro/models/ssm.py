@@ -1,0 +1,216 @@
+"""Mamba2 — state-space duality (SSD) layer [arXiv:2405.21060].
+
+Training uses the chunked SSD algorithm: within a chunk the recurrence is
+evaluated in its "dual" quadratic attention-like form (MXU-friendly batched
+matmuls); across chunks a lax.scan carries the SSM state. Decode is the pure
+recurrence (O(1) state per token — this is why the SSM archs run the
+long_500k cell).
+
+Simplifications vs the reference implementation (recorded in DESIGN.md):
+n_groups = 1 (B/C shared across heads), no dt clamping, depthwise conv done
+as shift-sum (width 4). The chunked path and the step-by-step recurrence are
+cross-validated in tests (same math, different factorisation).
+
+Recurrence (per head h, state size N, head dim P):
+    h_t = exp(A_h·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t        h: (P, N)
+    y_t = C_t · h_t + D_h · x_t
+followed by a gated RMSNorm (y ⊙ silu(z)) and the output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .layers import normal_init, rms_norm
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, w = cfg.n_ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal_init(ks[0], (d, 2 * di + 2 * n + h), d, dtype),
+        "conv_x": normal_init(ks[1], (w, di), w, dtype),
+        "conv_b": normal_init(ks[2], (w, n), w, dtype),
+        "conv_c": normal_init(ks[3], (w, n), w, dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+        "D": jnp.ones((h,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xs = proj[..., di:2 * di]
+    b = proj[..., 2 * di:2 * di + n]
+    c = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, xs, b, c, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv via shift-sum. x: (B, S, C), w: (W, C).
+
+    state: (B, W-1, C) trailing context from previous tokens (decode); when
+    given, returns (out, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    if state is None:
+        return jax.nn.silu(out)
+    return jax.nn.silu(out), xp[:, -(width - 1):]
+
+
+def _ssd_chunked(cfg, xh, dt, a, b, c):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P), dt/a: (B,S,H) fp32 (a = A·dt ≤ 0), b/c: (B,S,N) fp32.
+    Returns y: (B,S,H,P) plus final state (B,H,P,N).
+    """
+    bs, s, h, p = xh.shape
+    n = b.shape[-1]
+    L = min(cfg.ssm_chunk, s)
+    if s % L:
+        # Pad with identity steps (dt=0 → a=0, zero input → state preserved,
+        # padded outputs sliced off below).
+        pad = L - s % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, xh.shape[1]
+    nc = s // L
+    xc = xh.reshape(bs, nc, L, h, p)
+    dtc = dt.reshape(bs, nc, L, h)
+    ac = a.reshape(bs, nc, L, h)
+    bc = b.reshape(bs, nc, L, n)
+    cc = c.reshape(bs, nc, L, n)
+
+    cs = jnp.cumsum(ac, axis=2)                      # inclusive (B,nc,L,H)
+    seg_end = cs[:, :, -1:, :]                       # total chunk decay
+
+    # ---- intra-chunk (quadratic dual form) ----
+    g = jnp.einsum("bctn,bcsn->bcts", cc, bc)        # (B,nc,L,L)
+    # Mask BEFORE the exp (exp(+large)·0 would produce NaN grads).
+    darg = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # t,s,H
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], darg, -1e30))
+    scores = g[..., None] * decay * dtc[:, :, None, :, :]         # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, xc.astype(jnp.float32))
+
+    # ---- per-chunk input state (contribution entering the carried state) ----
+    decay_out = jnp.exp(seg_end - cs)                # (B,nc,L,H)
+    w_in = decay_out * dtc                           # (B,nc,L,H)
+    state_in = jnp.einsum("bcsh,bcshp,bcsn->bchpn",
+                          w_in, xc.astype(jnp.float32), bc)
+
+    # ---- scan over chunks: prefix states ----
+    seg_decay = jnp.exp(seg_end[:, :, 0, :])         # (B,nc,H)
+
+    def chunk_step(hprev, xs_):
+        sd, sin = xs_                                # (B,H), (B,H,P,N)
+        hnew = sd[:, :, None, None] * hprev + sin
+        return hnew, hprev                           # emit state BEFORE chunk
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    hfin, hprefix = lax.scan(
+        chunk_step, h0,
+        (seg_decay.transpose(1, 0, 2), state_in.transpose(1, 0, 2, 3, 4)))
+    hprefix = hprefix.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+
+    # ---- inter-chunk: y_inter[t] = exp(cs_t) · C_t · h_chunk_start ----
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", cc, hprefix) * \
+        jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(bs, s, h, p)[:, :s_orig]
+    return y, hfin
+
+
+def ssm_forward(params, cfg, x, axes=None, state=None):
+    """Full-sequence SSD layer. x: (B,S,d) → (B,S,d).
+
+    state: optional dict(h, conv_x, conv_b, conv_c) for chunked serving;
+    when provided, returns (out, new_state)."""
+    bs, s, d = x.shape
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = x @ params["in_proj"]
+    z, xs_raw, b_raw, c_raw, dt = _split_proj(cfg, proj)
+    xs = _causal_conv(xs_raw, params["conv_x"])
+    b = _causal_conv(b_raw, params["conv_b"])
+    c = _causal_conv(c_raw, params["conv_c"])
+    if axes is not None:
+        tdi = axes.tp_if_divisible(cfg.d_inner)
+        xs = axes.constrain(xs, "dp", None, tdi)
+        z = axes.constrain(z, "dp", None, tdi)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32)) * dtf      # (B,S,H)
+    xh = xs.reshape(bs, s, h, p)
+    y, hfin = _ssd_chunked(cfg, xh, dtf, a, b.astype(jnp.float32),
+                           c.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(bs, s, h * p).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if state is not None:
+        # Conv continuation state: last W-1 *pre-conv* inputs.
+        w = cfg.ssm_conv
+        tail = jnp.concatenate([xs_raw, b_raw, c_raw], axis=-1)[:, -(w - 1):]
+        tail = tail.astype(state["conv"].dtype)
+        return out, dict(state, h=hfin, conv=tail)
+    return out
+
+
+def ssm_decode_step(params, cfg, x, state, axes=None):
+    """Single-token recurrence. x: (B,1,d); state: {h (B,H,P,N) fp32,
+    conv (B, W-1, d_inner+2N)} → (out (B,1,d), new_state)."""
+    bs = x.shape[0]
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di, w = cfg.d_inner, cfg.ssm_conv
+    proj = x @ params["in_proj"]
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+
+    conv_state = state["conv"]                      # (B, W-1, di+2n)
+    sx, sb, sc = (conv_state[..., :di], conv_state[..., di:di + n],
+                  conv_state[..., di + n:])
+    xs, sx = _causal_conv(xs, params["conv_x"], sx)
+    b, sb = _causal_conv(b, params["conv_b"], sb)
+    c, sc = _causal_conv(c, params["conv_c"], sc)
+    new_conv = jnp.concatenate([sx, sb, sc], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # (B,1,H)
+    decay = jnp.exp(-jnp.exp(params["A_log"].astype(jnp.float32)) * dtf)
+    xh = xs.reshape(bs, h, p).astype(jnp.float32)
+    bf = b[:, 0].astype(jnp.float32)                # (B,N)
+    cf = c[:, 0].astype(jnp.float32)
+    hs = state["h"]
+    hs = decay[:, 0, :, None, None] * hs + \
+        (dtf[:, 0, :, None, None] * xh[..., None]) * bf[:, None, None, :]
+    y = jnp.einsum("bn,bhpn->bhp", cf, hs)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bs, 1, h * p).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"h": hs, "conv": new_conv}
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16):
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }

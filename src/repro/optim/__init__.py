@@ -1,0 +1,5 @@
+from .adamw import (OptConfig, adamw_update, clip_by_global_norm, global_norm,
+                    init_opt, schedule)
+
+__all__ = ["OptConfig", "init_opt", "adamw_update", "schedule",
+           "clip_by_global_norm", "global_norm"]

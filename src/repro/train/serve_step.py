@@ -1,0 +1,48 @@
+"""Serving steps: batched prefill + single-token decode (greedy/sampled).
+
+``serve_step`` is the unit the decode-shape dry-runs lower: one new token
+against a KV/SSM cache of the full context length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+
+
+def make_prefill_step(cfg, run, max_len: int, axes=None):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, max_len, axes, run)
+    return prefill_step
+
+
+def make_serve_step(cfg, run, axes=None, sample: bool = False,
+                    temperature: float = 1.0):
+    def serve_step(params, tokens, cache, rng=None):
+        logits, cache = decode_step(cfg, params, tokens, cache, axes, run)
+        if sample:
+            next_tok = jax.random.categorical(rng, logits / temperature, -1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), logits, cache
+    return serve_step
+
+
+def generate(cfg, params, prompt_tokens, n_steps: int, run, axes=None,
+             max_len: int = None, rng=None, sample: bool = False):
+    """Greedy/sampled generation loop (host-driven; used by examples)."""
+    b, s = prompt_tokens.shape
+    max_len = max_len or (s + n_steps)
+    logits, cache = prefill(cfg, params, {"tokens": prompt_tokens}, max_len,
+                            axes, run)
+    serve = make_serve_step(cfg, run, axes, sample)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(n_steps - 1):
+        step_rng = None if rng is None else jax.random.fold_in(rng, i)
+        tok, _, cache = serve(params, tok, cache, step_rng)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

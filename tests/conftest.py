@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests must see the real single CPU device — never the dry-run's 512
+# forced host devices (set only inside repro.launch.dryrun / subprocesses).
+assert "--xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run with forced host device count"
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,21 @@
+"""Multi-device semantics (8 fake CPU devices, subprocess so the main test
+process keeps its single real device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_semantics_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = os.path.join(os.path.dirname(__file__), "_distributed_check.py")
+    res = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "DISTRIBUTED_ALL_OK" in res.stdout

@@ -1,0 +1,84 @@
+"""Launch-layer units: input specs, collective parser, roofline math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, all_archs, cells, get_arch
+from repro.launch.roofline import (RooflineTerms, V5E, collective_bytes,
+                                   model_flops, roofline)
+from repro.launch.specs import input_specs, run_config_for
+from repro.models import RunConfig
+
+
+def test_cells_enumeration():
+    all_cells = cells(include_skipped=True)
+    assert len(all_cells) == 40                    # 10 archs × 4 shapes
+    skipped = [c for c in all_cells if c[2]]
+    assert len(skipped) == 8                       # long_500k × 8 quadratic
+    assert all(s.name == "long_500k" for _, s, sk in skipped if sk)
+
+
+def test_input_specs_shapes():
+    run = RunConfig()
+    for name, cfg in all_archs().items():
+        for sname, shape in SHAPES.items():
+            spec = input_specs(cfg, shape, run)
+            if shape.kind == "decode":
+                assert spec["tokens"].shape == (shape.global_batch,)
+            elif cfg.frontend == "stub":
+                assert spec["embeddings"].shape == (
+                    shape.global_batch, shape.seq_len, cfg.d_model)
+            else:
+                assert spec["tokens"].shape == (shape.global_batch,
+                                                shape.seq_len)
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[4,1024]{1,0} all-gather(bf16[2,1024]{1,0} %x), replica_groups={}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %y), to_apply=%sum
+  %ars = f32[64]{0} all-reduce-start(f32[64]{0} %z)
+  %ard = f32[64]{0} all-reduce-done(f32[64]{0} %ars)
+  %t = (f32[32]{0}, f32[32]{0}) all-to-all(f32[32]{0} %a, f32[32]{0} %b)
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %c)
+  %rs = bf16[8,16]{1,0} reduce-scatter(bf16[64,16]{1,0} %d)
+"""
+    out = collective_bytes(hlo)
+    assert out["bytes"]["all-gather"] == 4 * 1024 * 2
+    assert out["bytes"]["all-reduce"] == 128 * 4 + 64 * 4  # -done skipped
+    assert out["counts"]["all-reduce"] == 2
+    assert out["bytes"]["all-to-all"] == 2 * 32 * 4
+    assert out["bytes"]["collective-permute"] == 2 * 4
+    assert out["bytes"]["reduce-scatter"] == 8 * 16 * 2
+    assert out["total_bytes"] == sum(out["bytes"].values())
+
+
+def test_roofline_terms_math():
+    t = roofline(flops_per_chip=197e12, bytes_per_chip=819e9,
+                 coll_bytes_per_chip=50e9, model_flops=197e12 * 256,
+                 n_chips=256)
+    assert np.isclose(t.compute_s, 1.0)
+    assert np.isclose(t.memory_s, 1.0)
+    assert np.isclose(t.collective_s, 1.0)
+    assert np.isclose(t.useful_flops_ratio, 1.0)
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_model_flops_ordering():
+    """train > prefill > decode for a given arch; MoE active < total."""
+    cfg = get_arch("llama3.2-1b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr > 0 and pf > 0 and dec > 0
+    assert tr > dec and pf > dec
+    moe = get_arch("qwen3-moe-30b-a3b")
+    assert moe.active_param_count() < moe.param_count() / 3
+
+
+def test_run_config_for_shapes():
+    assert run_config_for(SHAPES["train_4k"]).remat == "full"
+    assert run_config_for(SHAPES["prefill_32k"]).attn_mode == "chunked"
+    assert run_config_for(SHAPES["decode_32k"]).remat == "none"
+    rc = run_config_for(SHAPES["train_4k"], {"attn_mode": "triangular"})
+    assert rc.attn_mode == "triangular"

@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests (REQUIRED: reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs) + numerics checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, all_archs, get_arch
+from repro.models import (RunConfig, decode_step, forward, init_cache,
+                          init_lm, loss_fn, prefill)
+from repro.optim import OptConfig
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+RUN = RunConfig(remat="none", attn_mode="dense")
+RUN32 = RunConfig(remat="none", attn_mode="dense",
+                  compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, key=KEY, b=B, s=S):
+    if cfg.frontend == "stub":
+        return {"embeddings": jax.random.normal(key, (b, s, cfg.d_model)),
+                "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("name", sorted(all_archs()))
+def test_arch_smoke_forward_and_train_step(name):
+    cfg = get_arch(name).reduced()
+    params = init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = forward(cfg, params, batch, run=RUN)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert not np.any(np.isnan(np.asarray(logits)))
+
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3))
+    state = init_train_state(cfg, params, tcfg)
+    step = make_train_step(cfg, RUN, tcfg)
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state["params"]):
+        assert not np.any(np.isnan(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("name", sorted(all_archs()))
+def test_arch_smoke_prefill_decode(name):
+    cfg = get_arch(name).reduced()
+    params = init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    logits, cache = prefill(cfg, params, batch, max_len=S + 4, run=RUN)
+    assert logits.shape == (B, cfg.vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = decode_step(cfg, params, tok, cache, run=RUN)
+    assert logits2.shape == (B, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits2)))
+    np.testing.assert_array_equal(np.asarray(cache2["pos"]),
+                                  np.asarray(cache["pos"]) + 1)
+
+
+@pytest.mark.parametrize("name", ["mamba2-780m", "llama3.2-1b",
+                                  "zamba2-2.7b", "qwen1.5-32b",
+                                  "granite-34b"])
+def test_prefill_decode_matches_forward(name):
+    """Serving path == training forward at the next position."""
+    cfg = get_arch(name).reduced()
+    params = init_lm(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    full, _ = forward(cfg, params, {"tokens": toks}, run=RUN32)
+    lg, cache = prefill(cfg, params, {"tokens": toks[:, :S]},
+                        max_len=S + 8, run=RUN32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S - 1]),
+                               atol=2e-4, rtol=1e-4)
+    lg2, _ = decode_step(cfg, params, toks[:, S], cache, run=RUN32)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(full[:, S]),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_moe_nodrop_prefill_consistency():
+    """With no-drop capacity, MoE routing is causal → prefill == forward."""
+    cfg = dataclasses.replace(get_arch("qwen3-moe-30b-a3b").reduced(),
+                              capacity_factor=8.0)
+    params = init_lm(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    full, _ = forward(cfg, params, {"tokens": toks}, run=RUN32)
+    lg, cache = prefill(cfg, params, {"tokens": toks[:, :S]},
+                        max_len=S + 8, run=RUN32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S - 1]),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_attention_modes_equivalent():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_lm(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 17), 0, cfg.vocab)}
+    outs = {}
+    for mode in ["dense", "chunked", "triangular"]:
+        r = dataclasses.replace(RUN32, attn_mode=mode, attn_chunk=4)
+        outs[mode], _ = forward(cfg, params, batch, run=r)
+    np.testing.assert_allclose(np.asarray(outs["chunked"]),
+                               np.asarray(outs["dense"]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(outs["triangular"]),
+                               np.asarray(outs["dense"]), atol=2e-5)
+
+
+def test_ssd_chunk_invariance():
+    """Chunked SSD == pure recurrence (chunk=1) — the state-space duality."""
+    cfg = get_arch("mamba2-780m").reduced()
+    params = init_lm(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 17), 0, cfg.vocab)}
+    a, _ = forward(cfg, params, batch, run=RUN32)
+    cfg1 = dataclasses.replace(cfg, ssm_chunk=1)
+    b, _ = forward(cfg1, params, batch, run=RUN32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_scan_vs_unroll_equivalence():
+    cfg = get_arch("zamba2-2.7b").reduced()
+    params = init_lm(cfg, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab)}
+    a, _ = forward(cfg, params, batch, run=RUN32)
+    b, _ = forward(cfg, params, batch,
+                   run=dataclasses.replace(RUN32, scan_layers=False))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_remat_matches_no_remat():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3))
+    outs = []
+    for remat in ["none", "full", "dots"]:
+        run = dataclasses.replace(RUN32, remat=remat)
+        state = init_train_state(cfg, params, tcfg)
+        state, m = jax.jit(make_train_step(cfg, run, tcfg))(state, batch)
+        outs.append(float(m["loss"]))
+    assert np.allclose(outs, outs[0], rtol=1e-6)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_arch("llama3.2-1b").reduced()
+    params = init_lm(cfg, KEY)
+    batch = _batch(cfg, b=4)
+    t1 = TrainConfig(opt=OptConfig(lr=1e-3), microbatches=1)
+    t2 = TrainConfig(opt=OptConfig(lr=1e-3), microbatches=2)
+    run = RUN32
+    s1, m1 = jax.jit(make_train_step(cfg, run, t1))(
+        init_train_state(cfg, params, t1), batch)
+    s2, m2 = jax.jit(make_train_step(cfg, run, t2))(
+        init_train_state(cfg, params, t2), batch)
+    # same data, same update (up to fp reassociation)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_param_count_close_to_init():
+    """Analytic param_count within 2% of actual init (per arch)."""
+    for name, full in all_archs().items():
+        cfg = full.reduced()
+        params = init_lm(cfg, KEY)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(analytic / actual - 1) < 0.02, (name, analytic, actual)
+
+
+def test_long_context_flags():
+    assert get_arch("mamba2-780m").supports_long_context
+    assert get_arch("zamba2-2.7b").supports_long_context
+    for n in ["phi3-medium-14b", "llama3.2-1b", "qwen1.5-32b", "granite-34b",
+              "qwen3-moe-30b-a3b", "granite-moe-1b-a400m", "musicgen-large",
+              "internvl2-2b"]:
+        assert not get_arch(n).supports_long_context, n

@@ -1,0 +1,137 @@
+"""Core sDTW: production implementations vs the naive oracle + properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (matsa, sdtw_batch, sdtw_ref, sdtw_rowscan,
+                        sdtw_wavefront, self_join_windows)
+from repro.core.sdtw_ref import dtw_ref, sdtw_matrix
+
+IMPLS = {
+    "rowscan": lambda q, r, **kw: sdtw_rowscan(jnp.asarray(q), jnp.asarray(r), **kw),
+    "wavefront": lambda q, r, **kw: sdtw_wavefront(jnp.asarray(q), jnp.asarray(r), **kw),
+}
+
+
+@pytest.mark.parametrize("impl", list(IMPLS))
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("dtype", [np.int32, np.int16, np.float32])
+def test_matches_oracle_random(impl, metric, dtype, rng):
+    for _ in range(6):
+        n = int(rng.integers(1, 24))
+        m = int(rng.integers(1, 48))
+        q = rng.integers(-60, 60, n).astype(dtype)
+        r = rng.integers(-60, 60, m).astype(dtype)
+        want = sdtw_ref(q, r, metric)
+        got = float(IMPLS[impl](q, r, metric=metric))
+        assert np.isclose(got, want, rtol=1e-5), (n, m, got, want)
+
+
+@pytest.mark.parametrize("impl", list(IMPLS))
+def test_padded_qlen(impl, rng):
+    q = rng.integers(-50, 50, 9).astype(np.int32)
+    qpad = np.concatenate([q, rng.integers(-50, 50, 6).astype(np.int32)])
+    r = rng.integers(-50, 50, 31).astype(np.int32)
+    got = float(IMPLS[impl](qpad, r, qlen=9))
+    assert got == sdtw_ref(q, r)
+
+
+def test_exact_subsequence_gives_zero(rng):
+    r = rng.integers(-50, 50, 40).astype(np.int32)
+    q = r[13:29]
+    assert sdtw_ref(q, r) == 0
+    assert float(sdtw_rowscan(jnp.asarray(q), jnp.asarray(r))) == 0
+    assert float(sdtw_wavefront(jnp.asarray(q), jnp.asarray(r))) == 0
+
+
+def test_literal_init_variant(rng):
+    """Paper Algorithm 1 as literally printed vs standard free-start."""
+    q = rng.integers(-20, 20, 6).astype(np.int32)
+    r = rng.integers(-20, 20, 15).astype(np.int32)
+    lit = sdtw_matrix(q, r, literal_init=True)
+    std = sdtw_matrix(q, r, literal_init=False)
+    # Literal zero row-0 init can only lower scores (0 ≤ any distance).
+    assert lit[-1].min() <= std[-1].min()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-40, 40), min_size=1, max_size=10),
+       st.lists(st.integers(-40, 40), min_size=1, max_size=20))
+def test_hyp_sdtw_le_dtw(qs, rs):
+    """Free boundary conditions can only help: sDTW(Q,R) <= DTW(Q,R)."""
+    q = np.asarray(qs, np.int32)
+    r = np.asarray(rs, np.int32)
+    assert sdtw_ref(q, r) <= dtw_ref(q, r) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-40, 40), min_size=1, max_size=8),
+       st.lists(st.integers(-40, 40), min_size=2, max_size=16),
+       st.lists(st.integers(-40, 40), min_size=1, max_size=6))
+def test_hyp_appending_reference_never_hurts(qs, rs, extra):
+    """Growing the reference adds alignment options (never raises the min)."""
+    q = np.asarray(qs, np.int32)
+    r = np.asarray(rs, np.int32)
+    r2 = np.concatenate([r, np.asarray(extra, np.int32)])
+    assert sdtw_ref(q, r2) <= sdtw_ref(q, r) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-40, 40), min_size=1, max_size=8),
+       st.lists(st.integers(-40, 40), min_size=1, max_size=16),
+       st.integers(1, 100))
+def test_hyp_shift_invariance(qs, rs, shift):
+    """abs_diff sDTW is invariant to a common additive offset."""
+    q = np.asarray(qs, np.int32)
+    r = np.asarray(rs, np.int32)
+    a = float(sdtw_rowscan(jnp.asarray(q), jnp.asarray(r)))
+    b = float(sdtw_rowscan(jnp.asarray(q + shift), jnp.asarray(r + shift)))
+    assert a == b
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(-30, 30), min_size=2, max_size=10),
+       st.lists(st.integers(-30, 30), min_size=4, max_size=20))
+def test_hyp_impls_agree(qs, rs):
+    q = np.asarray(qs, np.int32)
+    r = np.asarray(rs, np.int32)
+    a = float(sdtw_rowscan(jnp.asarray(q), jnp.asarray(r)))
+    b = float(sdtw_wavefront(jnp.asarray(q), jnp.asarray(r)))
+    assert a == b
+
+
+def test_batch_matches_individual(rng):
+    r = rng.integers(-50, 50, 37).astype(np.int32)
+    qs = rng.integers(-50, 50, (5, 11)).astype(np.int32)
+    batch = np.asarray(sdtw_batch(jnp.asarray(qs), jnp.asarray(r)))
+    indiv = [sdtw_ref(qs[i], r) for i in range(5)]
+    np.testing.assert_allclose(batch, indiv)
+
+
+def test_matsa_api_query_filtering(rng):
+    r = rng.integers(-50, 50, 64).astype(np.int32)
+    qs = rng.integers(-50, 50, (4, 8)).astype(np.int32)
+    res = matsa(r, qs, anomaly_threshold=50)
+    assert res.distances.shape == (4,)
+    assert res.anomalies.shape == (4,)
+    np.testing.assert_array_equal(
+        np.asarray(res.anomalies), np.asarray(res.distances) > 50)
+
+
+def test_matsa_api_self_join_exclusion(rng):
+    r = rng.integers(-50, 50, 48).astype(np.float32)
+    res_x = matsa(r, mode="self_join", window=8, stride=8, exclusion=True)
+    res_o = matsa(r, mode="self_join", window=8, stride=8, exclusion=False)
+    # Without exclusion every window trivially matches itself → 0 distance.
+    assert np.allclose(np.asarray(res_o.distances), 0.0)
+    assert np.all(np.asarray(res_x.distances) > 0)
+
+
+def test_self_join_windows_shapes(rng):
+    r = rng.integers(-5, 5, 20).astype(np.int32)
+    w, starts = self_join_windows(jnp.asarray(r), 6, 2)
+    assert w.shape == (8, 6)
+    np.testing.assert_array_equal(np.asarray(w[0]), r[:6])
+    np.testing.assert_array_equal(np.asarray(starts),
+                                  np.arange(0, 15, 2))

@@ -1,0 +1,78 @@
+"""Pallas sDTW kernel: interpret-mode allclose sweeps vs the pure-jnp oracle
+(which is itself cross-checked against the numpy oracle here)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sdtw_ref import sdtw_ref
+from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
+
+SHAPES = [
+    # (B, N, M, block_q, block_m) — covers single/multi tile, odd sizes,
+    # padding in both grid dimensions.
+    (1, 1, 1, 1, 8),
+    (3, 5, 17, 2, 8),
+    (4, 9, 70, 2, 16),
+    (5, 12, 257, 4, 64),
+    (8, 33, 1030, 8, 256),
+]
+
+
+@pytest.mark.parametrize("b,n,m,bq,bm", SHAPES)
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_kernel_shape_dtype_sweep(b, n, m, bq, bm, metric, dtype, rng):
+    q = rng.integers(-40, 40, (b, n)).astype(dtype)
+    r = rng.integers(-40, 40, m).astype(dtype)
+    got = np.asarray(sdtw_pallas(jnp.asarray(q), jnp.asarray(r),
+                                 metric=metric, block_q=bq, block_m=bm))
+    want = np.array([sdtw_ref(q[i], r, metric) for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    jref = np.asarray(sdtw_ref_jnp(jnp.asarray(q), jnp.asarray(r),
+                                   metric=metric))
+    np.testing.assert_allclose(jref, want, rtol=1e-5)
+
+
+def test_kernel_bf16_inputs(rng):
+    q = rng.integers(-8, 8, (2, 6)).astype(np.float32)
+    r = rng.integers(-8, 8, 40).astype(np.float32)
+    got = np.asarray(sdtw_pallas(jnp.asarray(q, jnp.bfloat16),
+                                 jnp.asarray(r, jnp.bfloat16),
+                                 block_q=2, block_m=16))
+    want = np.array([sdtw_ref(q[i], r) for i in range(2)])
+    np.testing.assert_allclose(got, want, rtol=2e-2)
+
+
+def test_kernel_variable_qlens(rng):
+    q = rng.integers(-40, 40, (6, 12)).astype(np.int32)
+    r = rng.integers(-40, 40, 53).astype(np.int32)
+    qlens = np.array([12, 1, 5, 7, 3, 9], np.int32)
+    got = np.asarray(sdtw_pallas(jnp.asarray(q), jnp.asarray(r),
+                                 jnp.asarray(qlens), block_q=2, block_m=16))
+    want = np.array([sdtw_ref(q[i, :qlens[i]], r) for i in range(6)])
+    np.testing.assert_allclose(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 9), st.integers(1, 40),
+       st.integers(0, 1000))
+def test_hyp_kernel_matches_oracle(b, n, m, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-30, 30, (b, n)).astype(np.int32)
+    r = rng.integers(-30, 30, m).astype(np.int32)
+    got = np.asarray(sdtw_pallas(jnp.asarray(q), jnp.asarray(r),
+                                 block_q=2, block_m=8))
+    want = np.array([sdtw_ref(q[i], r) for i in range(b)])
+    np.testing.assert_allclose(got, want)
+
+
+def test_kernel_block_shape_invariance(rng):
+    """Tiling must not change the result (boundary-carry correctness)."""
+    q = rng.integers(-40, 40, (4, 10)).astype(np.int32)
+    r = rng.integers(-40, 40, 96).astype(np.int32)
+    outs = [np.asarray(sdtw_pallas(jnp.asarray(q), jnp.asarray(r),
+                                   block_q=bq, block_m=bm))
+            for bq, bm in [(1, 8), (2, 16), (4, 32), (4, 96), (2, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
