@@ -1,8 +1,10 @@
 """sDTW implementation shoot-out on this host (CPU wall-times).
 
 Compares the paper-faithful wavefront schedule against the beyond-paper
-tropical row-scan and the Pallas kernel (interpret mode on CPU — its TPU
-performance is projected by the roofline, not measured here). Feeds
+tropical row-scan, the Pallas kernel (interpret mode on CPU — its TPU
+performance is projected by the roofline, not measured here), and the
+unified engine's chunked-streaming path on a long reference (the regime of
+the paper's Seismology/Power/ECG workloads, M ≈ 1.7–1.8M). Feeds
 EXPERIMENTS.md §Perf (paper-faithful baseline vs optimized, measured)."""
 import functools
 
@@ -10,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sdtw_batch
+from repro.core import sdtw, sdtw_batch
 from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
 
 from .common import emit, time_call
@@ -30,6 +32,7 @@ def main():
             sdtw_batch, q, r, impl="rowscan"),
         "pallas_interpret": functools.partial(
             sdtw_pallas, q, r, block_q=8, block_m=512),
+        "engine_auto": functools.partial(sdtw, q, r),
     }
     base = None
     for name, fn in fns.items():
@@ -41,6 +44,19 @@ def main():
              f"Mcells_per_s={rate:.1f}{speedup}")
         if base is None:
             base = us
+
+    # Long-reference sweep: engine chunked streaming, M ≥ 256K in bounded
+    # memory (only the (b, N) boundary column crosses chunk boundaries).
+    bl, nl, ml = 4, 32, 1 << 18
+    ql = jnp.asarray(rng.integers(-100, 100, (bl, nl)).astype(np.int32))
+    rl = jnp.asarray(rng.integers(-100, 100, ml).astype(np.int32))
+    for chunk in (8192, 32768):
+        fn = functools.partial(sdtw, ql, rl, impl="chunked", chunk=chunk)
+        us = time_call(fn, repeats=3, warmup=1)
+        cells = bl * nl * ml
+        rate = cells / (us * 1e-6) / 1e6
+        emit(f"sdtw_kernel/engine_chunked_b{bl}_n{nl}_m{ml}_c{chunk}", us,
+             f"Mcells_per_s={rate:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Version shims for the pinned jax (0.4.37).
+
+The codebase targets the modern jax surface (``jax.tree.flatten_with_path``,
+``jax.shard_map``); the pinned 0.4.x release spells these differently.
+Everything version-sensitive goes through this module so a future jax bump
+is a one-file change.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["tree_flatten_with_path", "shard_map"]
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` (jax >= 0.4.34ish) or the tree_util
+    spelling available on every 0.4.x."""
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` when present; otherwise the experimental spelling.
+
+    The replication-checker kwarg was renamed ``check_rep`` → ``check_vma``
+    when shard_map was promoted out of jax.experimental; we accept the new
+    name and translate.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

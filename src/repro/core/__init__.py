@@ -1,14 +1,17 @@
 """MATSA core: sDTW algorithms, the accelerator API, and evaluation models."""
 from .distances import METRICS, pointwise_distance
+from .engine import choose_impl, sdtw
 from .matsa_api import MatsaResult, load_real_workload_shapes, matsa, synthetic_timeseries
 from .pum_model import (MATSA_EMBEDDED, MATSA_HPC, MATSA_PORTABLE, SWEEP,
                         VERSIONS, MramParams, OpCounts, SimResult, Workload,
                         endurance_writes_per_cell, simulate)
 from .platforms import PAPER_TABLE6, PLATFORMS, PlatformModel
-from .sdtw import sdtw_batch, sdtw_rowscan, sdtw_wavefront, self_join_windows
+from .sdtw import (sdtw_batch, sdtw_chunked, sdtw_rowscan, sdtw_wavefront,
+                   self_join_windows)
 from .sdtw_ref import dtw_ref, sdtw_matrix, sdtw_ref
 
 __all__ = [
+    "sdtw", "choose_impl", "sdtw_chunked",
     "METRICS", "pointwise_distance",
     "MatsaResult", "matsa", "load_real_workload_shapes", "synthetic_timeseries",
     "MramParams", "OpCounts", "Workload", "SimResult", "simulate",

@@ -1,0 +1,213 @@
+"""Unified sDTW engine — the single front door every caller routes through.
+
+``sdtw()`` hides four execution regimes behind one call:
+
+  * ``rowscan`` / ``wavefront`` — the in-core JAX schedules of
+    ``repro.core.sdtw`` (tropical associative scan vs the paper-faithful
+    anti-diagonal wavefront).
+  * ``pallas``  — the TPU kernel of ``repro.kernels.sdtw`` (interpret mode
+    off-TPU).
+  * ``chunked`` — reference streaming: the reference is processed in
+    fixed-size tiles carrying only the O(N) boundary column between tiles
+    (MATSA's inter-subarray pass gates, §III-B), so the paper's M≈1.8M ECG
+    references run in bounded memory under one jitted shape.
+  * ``sharded`` — the reference axis is sharded across devices
+    (``repro.distributed.sdtw_sharded``); the chunk carry is exchanged
+    between neighbouring devices with ``lax.ppermute``.
+
+Dispatch rules (``impl="auto"``):
+
+  1. ``mesh`` given (or ``impl="sharded"``)        → sharded driver.
+  2. ``chunk`` given explicitly                    → chunked streaming.
+  3. TPU backend and no exclusion zone             → Pallas kernel (its
+     tile grid already streams arbitrary M).
+  4. M ≥ ``CHUNK_THRESHOLD``                       → chunked streaming.
+  5. M < 2·N (reference not much longer than query)→ wavefront (diagonal
+     depth N+M-1 ≈ cheap; avoids the associative-scan constant).
+  6. otherwise                                     → rowscan.
+
+``impl=`` is an escape hatch that forces any of the five paths.
+
+Ragged batches: a *list* of 1-D queries with mixed lengths is bucketed —
+each query is padded up to the next power-of-two length (min
+``MIN_BUCKET``) and queries sharing a bucket run as one batched call. The
+compiled-shape count is therefore O(log max_len) across the process
+lifetime instead of one shape per distinct query length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sdtw import sdtw_batch, sdtw_chunked
+
+IMPLS = ("auto", "rowscan", "wavefront", "pallas", "chunked", "sharded")
+
+CHUNK_THRESHOLD = 1 << 17   # auto-switch to streaming above this M
+DEFAULT_CHUNK = 8192        # tile size for chunked/sharded streaming
+MIN_BUCKET = 16             # smallest ragged-batch padded length
+
+
+def choose_impl(nq: int, n: int, m: int, *, backend: Optional[str] = None,
+                mesh=None, chunk: Optional[int] = None,
+                has_exclusion: bool = False) -> str:
+    """The ``impl="auto"`` dispatch rule (documented in the module docstring,
+    exercised directly by the tests)."""
+    if mesh is not None:
+        return "sharded"
+    if chunk is not None:
+        return "chunked"
+    backend = jax.default_backend() if backend is None else backend
+    if backend == "tpu" and not has_exclusion:
+        # The Pallas kernel streams arbitrary M through its own tile grid —
+        # long references stay on the kernel path on the target hardware.
+        return "pallas"
+    if m >= CHUNK_THRESHOLD:
+        return "chunked"
+    if m < 2 * n:
+        return "wavefront"
+    return "rowscan"
+
+
+def _bucket_len(length: int) -> int:
+    return max(MIN_BUCKET, 1 << max(0, int(length) - 1).bit_length())
+
+
+def _is_ragged(queries) -> bool:
+    if isinstance(queries, (list, tuple)):
+        return True
+    return False
+
+
+def _normalize_excl(val, nq: int):
+    if val is None:
+        return jnp.full((nq,), -1, jnp.int32)
+    arr = jnp.asarray(val, jnp.int32)
+    if arr.ndim == 0:
+        arr = jnp.full((nq,), arr, jnp.int32)
+    return arr
+
+
+def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
+         impl: str = "auto", chunk: Optional[int] = None,
+         excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
+         block_q: int = 8, block_m: int = 512):
+    """Subsequence-DTW distances of ``queries`` against ``reference``.
+
+    Args:
+      queries:   (nq, N) padded array, a single (N,) query, or a list of
+                 1-D queries with mixed lengths (ragged — bucketed dispatch).
+      reference: (M,) reference sequence.
+      qlens:     (nq,) true query lengths for padded 2-D input.
+      metric:    'abs_diff' | 'square_diff'.
+      impl:      one of ``IMPLS``; 'auto' applies the dispatch rules above.
+      chunk:     reference tile size for the chunked/sharded paths; setting
+                 it forces streaming under 'auto'.
+      excl_lo/excl_hi: banned reference column range per query (self-join
+                 exclusion zones); scalar or (nq,).
+      mesh:      a jax Mesh whose ``ref_axis`` shards the reference axis;
+                 forces the sharded driver under 'auto'.
+      block_q/block_m: Pallas kernel block shape.
+
+    Returns: (nq,) distances in the accumulator dtype — scalar for a single
+    1-D query.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if (excl_lo is None) != (excl_hi is None):
+        raise ValueError("excl_lo and excl_hi must be given together "
+                         "(a one-sided zone would silently ban nothing)")
+
+    if _is_ragged(queries):
+        if qlens is not None:
+            raise ValueError("qlens is implied by ragged (list) queries")
+        return _sdtw_ragged(queries, reference, metric=metric, impl=impl,
+                            chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
+                            mesh=mesh, ref_axis=ref_axis,
+                            block_q=block_q, block_m=block_m)
+
+    queries = jnp.asarray(queries)
+    reference = jnp.asarray(reference)
+    single = queries.ndim == 1
+    if single:
+        queries = queries[None, :]
+    nq, n = queries.shape
+    m = reference.shape[0]
+    if qlens is not None:
+        qlens = jnp.asarray(qlens, jnp.int32)
+
+    has_excl = excl_lo is not None or excl_hi is not None
+    if impl == "auto":
+        impl = choose_impl(nq, n, m, mesh=mesh, chunk=chunk,
+                           has_exclusion=has_excl)
+    if impl == "pallas" and has_excl:
+        raise ValueError("the pallas kernel does not support exclusion "
+                         "zones; use impl='rowscan' or 'chunked'")
+
+    if impl in ("rowscan", "wavefront"):
+        lo = _normalize_excl(excl_lo, nq) if has_excl else None
+        hi = _normalize_excl(excl_hi, nq) if has_excl else None
+        out = sdtw_batch(queries, reference, qlens, metric, impl, lo, hi)
+    elif impl == "pallas":
+        from repro.kernels.sdtw import sdtw_pallas
+        out = sdtw_pallas(queries, reference, qlens, metric,
+                          block_q=block_q, block_m=block_m)
+    elif impl == "chunked":
+        out = sdtw_chunked(queries, reference, qlens, metric,
+                           chunk or DEFAULT_CHUNK,
+                           _normalize_excl(excl_lo, nq),
+                           _normalize_excl(excl_hi, nq))
+    else:  # sharded
+        from repro.distributed.sdtw_sharded import sdtw_sharded
+        out = sdtw_sharded(queries, reference, qlens, metric=metric,
+                           mesh=mesh, axis=ref_axis,
+                           chunk=chunk or DEFAULT_CHUNK,
+                           excl_lo=_normalize_excl(excl_lo, nq),
+                           excl_hi=_normalize_excl(excl_hi, nq))
+    return out[0] if single else out
+
+
+def bucketize(lengths: Sequence[int]):
+    """Group query indices by padded power-of-two bucket length.
+
+    Returns {bucket_len: [query indices]} with deterministic ordering.
+    """
+    buckets: dict[int, list[int]] = {}
+    for i, L in enumerate(lengths):
+        if L < 1:
+            raise ValueError(f"query {i} is empty")
+        buckets.setdefault(_bucket_len(L), []).append(i)
+    return dict(sorted(buckets.items()))
+
+
+def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
+                 excl_hi, mesh, ref_axis, block_q, block_m):
+    """Bucketed dispatch for mixed-length query sets."""
+    qs = [np.asarray(q) for q in queries]
+    nq = len(qs)
+    if nq == 0:
+        return jnp.zeros((0,), jnp.int32)
+    lo = np.asarray(_normalize_excl(excl_lo, nq))
+    hi = np.asarray(_normalize_excl(excl_hi, nq))
+    buckets = bucketize([len(q) for q in qs])
+
+    out = [None] * nq
+    for blen, idxs in buckets.items():
+        dtype = np.result_type(*[qs[i].dtype for i in idxs])
+        padded = np.zeros((len(idxs), blen), dtype)
+        qlens = np.empty((len(idxs),), np.int32)
+        for k, i in enumerate(idxs):
+            padded[k, :len(qs[i])] = qs[i]
+            qlens[k] = len(qs[i])
+        dists = sdtw(jnp.asarray(padded), reference, jnp.asarray(qlens),
+                     metric=metric, impl=impl, chunk=chunk,
+                     excl_lo=jnp.asarray(lo[idxs]),
+                     excl_hi=jnp.asarray(hi[idxs]),
+                     mesh=mesh, ref_axis=ref_axis,
+                     block_q=block_q, block_m=block_m)
+        for k, i in enumerate(idxs):
+            out[i] = dists[k]
+    return jnp.stack(out)

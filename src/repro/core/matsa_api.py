@@ -18,7 +18,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .sdtw import sdtw_batch, self_join_windows
+from . import engine
+from .sdtw import self_join_windows
 
 MODES = ("query_filtering", "self_join")
 
@@ -40,7 +41,9 @@ def matsa(reference,
           window: int = None,
           stride: int = 1,
           exclusion: bool = True,
-          impl: str = "rowscan") -> MatsaResult:
+          impl: str = "auto",
+          chunk: int = None,
+          mesh=None) -> MatsaResult:
     """Run TSA over a reference, per the paper's host API.
 
     query_filtering: ``queries`` (n_queries, max_len) padded array compared
@@ -51,6 +54,10 @@ def matsa(reference,
 
     An ``anomaly_threshold`` marks queries whose best-alignment distance
     exceeds it (discords, per §II-A), mirroring the paper's anomaly output.
+
+    All distance computation routes through ``repro.core.engine.sdtw`` —
+    ``impl`` (default 'auto'), ``chunk`` (reference streaming tile), and
+    ``mesh`` (multi-device reference sharding) pass straight through.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -80,8 +87,9 @@ def matsa(reference,
                  if query_sizes is None else jnp.asarray(query_sizes, jnp.int32))
         excl_lo = excl_hi = None
 
-    distances = sdtw_batch(queries, reference, qlens, dist_metric, impl,
-                           excl_lo, excl_hi)
+    distances = engine.sdtw(queries, reference, qlens, metric=dist_metric,
+                            impl=impl, chunk=chunk, mesh=mesh,
+                            excl_lo=excl_lo, excl_hi=excl_hi)
     anomalies = None
     if anomaly_threshold is not None:
         anomalies = distances > jnp.asarray(anomaly_threshold, distances.dtype)

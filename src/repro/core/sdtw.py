@@ -152,6 +152,140 @@ def sdtw_wavefront(query, reference, qlen=None, metric: str = "abs_diff",
 
 
 # ---------------------------------------------------------------------------
+# Chunked reference streaming (boundary-column carry).
+#
+# The reference axis is processed in fixed-size tiles; between tiles only the
+# O(N) boundary column S[:, tile_end] is carried — the direct analogue of
+# MATSA's inter-subarray pass gates (§III-B). The same carry doubles as the
+# inter-device protocol of ``repro.distributed.sdtw_sharded`` (ppermute the
+# column to the device holding the next reference segment).
+# ---------------------------------------------------------------------------
+
+def sdtw_carry_init(nq: int, n: int, acc):
+    """Fresh chunk carry: (boundary column (nq, N), running best (nq,)).
+
+    BIG everywhere = "no reference columns seen yet": a BIG left/diagonal
+    neighbour reproduces the global column-0 recurrence exactly (the only
+    finite predecessor of cell (i, 0) is S[i-1, 0])."""
+    BIG = big(acc)
+    return jnp.full((nq, n), BIG, acc), jnp.full((nq,), BIG, acc)
+
+
+def _chunk_masked_distance(qi, ref_chunk, metric, j0, m_total, excl_lo,
+                           excl_hi, BIG):
+    """Distance row for one chunk, masking by *global* reference position."""
+    d = pointwise_distance(qi, ref_chunk, metric)
+    j = j0 + jnp.arange(ref_chunk.shape[0])
+    banned = ((j >= excl_lo) & (j < excl_hi)) | (j >= m_total)
+    return jnp.where(banned, BIG, d)
+
+
+def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
+                       m_total=None, metric: str = "abs_diff",
+                       excl_lo=None, excl_hi=None):
+    """One reference chunk of the row-scan, entered/exited via the carry.
+
+    Args:
+      query:     (N,) possibly padded query.
+      ref_chunk: (C,) reference tile covering global columns [j0, j0 + C).
+      bcol:      (N,) boundary column S[:, j0 - 1] (BIG for the first chunk).
+      best:      scalar running best (min over row qlen-1 of prior chunks).
+      qlen:      true query length; j0: global column offset of the chunk;
+      m_total:   true reference length (columns >= m_total are masked).
+
+    Returns (new_bcol, new_best) with new_bcol = S[:, j0 + C - 1].
+    """
+    acc = accum_dtype(jnp.result_type(query, ref_chunk))
+    BIG = big(acc)
+    n = query.shape[0]
+    qlen = jnp.asarray(n if qlen is None else qlen, jnp.int32)
+    m_total = (j0 + ref_chunk.shape[0] if m_total is None else m_total)
+    excl_lo = jnp.asarray(-1 if excl_lo is None else excl_lo, jnp.int32)
+    excl_hi = jnp.asarray(-1 if excl_hi is None else excl_hi, jnp.int32)
+    bcol = bcol.astype(acc)
+    best = jnp.asarray(best, acc)
+
+    dist = functools.partial(_chunk_masked_distance, metric=metric, j0=j0,
+                             m_total=m_total, excl_lo=excl_lo,
+                             excl_hi=excl_hi, BIG=BIG)
+    s0 = dist(query[0], ref_chunk)                  # row 0: free start
+    best = jnp.where(qlen == 1, jnp.minimum(best, jnp.min(s0)), best)
+
+    def row_step(carry, xs):
+        prev, best, i = carry
+        qi, b_left, b_diag = xs          # S[i, j0-1], S[i-1, j0-1]
+        d = dist(qi, ref_chunk)
+        prev_sh = jnp.concatenate([b_diag[None], prev[:-1]])
+        mn = jnp.minimum(prev_sh, prev)  # min(S[i-1,j-1], S[i-1,j])
+        a, u = d, sat_add(d, mn)
+        a_p, u_p = lax.associative_scan(_tropical_combine, (a, u))
+        s = jnp.minimum(u_p, sat_add(a_p, b_left))  # fold in S[i, j0-1]
+        best = jnp.where(i == qlen - 1, jnp.minimum(best, jnp.min(s)), best)
+        return (s, best, i + 1), s[-1]
+
+    (_, best, _), tail = lax.scan(row_step, (s0, best, jnp.int32(1)),
+                                  (query[1:], bcol[1:], bcol[:-1]))
+    new_bcol = jnp.concatenate([s0[-1:], tail])
+    return new_bcol, best
+
+
+def sdtw_chunk_batch(queries, ref_chunk, qlens, carry, j0, m_total,
+                     metric: str, excl_lo, excl_hi):
+    """Advance the batched carry (bcol (nq, N), best (nq,)) by one chunk."""
+    bcol, best = carry
+    return jax.vmap(
+        lambda q, ql, bc, be, lo, hi: sdtw_rowscan_chunk(
+            q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi)
+    )(queries, qlens, bcol, best, excl_lo, excl_hi)
+
+
+def sdtw_segment(queries, segment, qlens, carry, j0, m_total, metric: str,
+                 chunk: int, excl_lo, excl_hi):
+    """Stream a reference segment through the carry in ``chunk``-sized tiles.
+
+    ``segment`` length must be a static multiple of ``chunk``; ``j0`` (the
+    segment's global column offset) and ``m_total`` may be traced — this is
+    what lets the sharded driver reuse the code with a per-device offset.
+    Memory is O(nq·N + chunk) regardless of segment length (lax.scan).
+    """
+    n_tiles = segment.shape[0] // chunk
+    tiles = segment.reshape(n_tiles, chunk)
+
+    def step(c, xs):
+        tile, k = xs
+        return sdtw_chunk_batch(queries, tile, qlens, c, j0 + k * chunk,
+                                m_total, metric, excl_lo, excl_hi), None
+
+    carry, _ = lax.scan(step, carry, (tiles, jnp.arange(n_tiles)))
+    return carry
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "chunk"))
+def sdtw_chunked(queries, reference, qlens=None, metric: str = "abs_diff",
+                 chunk: int = 4096, excl_lo=None, excl_hi=None):
+    """Batched sDTW over an arbitrarily long reference in bounded memory.
+
+    The reference is padded to a multiple of ``chunk`` and scanned tile by
+    tile under a single jitted shape; only the (nq, N) boundary column is
+    carried between tiles. M = millions runs in O(nq·N + chunk) live memory.
+    """
+    nq, n = queries.shape
+    m = reference.shape[0]
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    if qlens is None:
+        qlens = jnp.full((nq,), n, jnp.int32)
+    if excl_lo is None:
+        excl_lo = jnp.full((nq,), -1, jnp.int32)
+        excl_hi = jnp.full((nq,), -1, jnp.int32)
+    n_tiles = -(-m // chunk)
+    r_pad = jnp.pad(reference, (0, n_tiles * chunk - m))
+    carry = sdtw_carry_init(nq, n, acc)
+    _, best = sdtw_segment(queries, r_pad, qlens, carry, 0, m, metric,
+                           chunk, excl_lo, excl_hi)
+    return best
+
+
+# ---------------------------------------------------------------------------
 # Batched front-ends.
 # ---------------------------------------------------------------------------
 

@@ -1,3 +1,12 @@
 from .sharding import Axes, tree_shardings
 
-__all__ = ["Axes", "tree_shardings"]
+__all__ = ["Axes", "tree_shardings", "sdtw_sharded"]
+
+
+def __getattr__(name):
+    # Lazy: sdtw_sharded pulls in repro.core; keep the base import light and
+    # cycle-free (repro.core.engine lazily imports this module too).
+    if name == "sdtw_sharded":
+        from .sdtw_sharded import sdtw_sharded
+        return sdtw_sharded
+    raise AttributeError(name)

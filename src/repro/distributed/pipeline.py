@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def split_stages(stacked_params, n_stages: int):
     """Reshape [L, ...] stacked layer params into [S, L/S, ...]."""
@@ -72,7 +74,7 @@ def pipeline_apply(block_fn, stage_params, x_micro, mesh, axis: str = "stage"):
         return lax.psum(result, axis)          # replicate to all stages
 
     in_specs = jax.tree.map(lambda p: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         stage_body, mesh=mesh,
         in_specs=(in_specs, P()),
         out_specs=P(),

@@ -1,9 +1,14 @@
 """Jitted wrapper around the sDTW Pallas kernel.
 
-Handles padding/alignment, BlockSpec plumbing, dtype promotion, and the
+Handles padding/alignment, BlockSpec plumbing, dtype promotion, the
 interpret-mode fallback (this container is CPU-only; TPU is the target —
 ``interpret=None`` auto-selects interpret mode off-TPU, per the validation
-protocol)."""
+protocol), and the chunk-carry protocol: a call may start from a
+(boundary-column, best) carry produced by a previous call over an earlier
+reference slice and return the carry for the next slice, so an arbitrarily
+long reference can be streamed through fixed-shape kernel launches — the
+same O(N) boundary-column hand-off MATSA performs between subarrays
+(§III-B), lifted to the call boundary."""
 from __future__ import annotations
 
 import functools
@@ -11,7 +16,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.distances import accum_dtype, big
 from .sdtw import _sdtw_kernel
@@ -26,16 +30,26 @@ def _ceil_to(x: int, m: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("metric", "block_q", "block_m", "interpret"))
+    static_argnames=("metric", "block_q", "block_m", "interpret",
+                     "return_carry"))
 def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 block_q: int = DEFAULT_BLOCK_Q,
                 block_m: int = DEFAULT_BLOCK_M,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                carry=None,
+                return_carry: bool = False):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
-    VMEM working set per grid cell ≈ block_q·(2·block_m + 2·N) accumulator
-    words — block shapes must be chosen so this fits (~16 MB VMEM on v5e);
-    the defaults handle N ≤ 64K comfortably.
+    VMEM working set per grid cell ≈ block_q·(2·block_m + 3·N) accumulator
+    words (queries + carry-in column + boundary column) — block shapes must
+    be chosen so this fits (~16 MB VMEM on v5e); the defaults handle
+    N ≤ 48K comfortably.
+
+    Chunk-carry protocol: ``carry`` is an optional (bcol (B, N), best (B,))
+    pair — the DP boundary column S[:, -1] of the reference slice processed
+    so far plus the running per-query best. Passing the carry returned by a
+    previous call (``return_carry=True``) continues the recurrence as if the
+    two reference slices had been one array.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -46,6 +60,13 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
 
     if qlens is None:
         qlens = jnp.full((b,), n, jnp.int32)
+    if carry is None:
+        bcol = jnp.full((b, n), BIG, acc)
+        best = jnp.full((b,), BIG, acc)
+    else:
+        bcol, best = carry
+        bcol = bcol.astype(acc)
+        best = best.astype(acc)
     bp = _ceil_to(b, block_q)
     mp = _ceil_to(max(m, block_m), block_m)
 
@@ -53,11 +74,13 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     r_pad = jnp.zeros((1, mp), reference.dtype).at[0, :m].set(reference)
     qlen_pad = jnp.ones((bp, 1), jnp.int32).at[:b, 0].set(qlens)
     rlen = jnp.full((1, 1), m, jnp.int32)
+    bcol_pad = jnp.full((bp, n), BIG, acc).at[:b].set(bcol)
+    best_pad = jnp.full((bp, 1), BIG, acc).at[:b, 0].set(best)
 
     grid = (bp // block_q, mp // block_m)
     kernel = functools.partial(_sdtw_kernel, metric, n, block_m)
 
-    out = pl.pallas_call(
+    out, bound = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -65,10 +88,20 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
             pl.BlockSpec((1, block_m), lambda qb, t: (0, t)),
             pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
             pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
+            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
         ],
-        out_specs=pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, 1), acc),
-        scratch_shapes=[pltpu.VMEM((block_q, n), acc)],
+        out_specs=[
+            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), acc),
+            jax.ShapeDtypeStruct((bp, n), acc),
+        ],
         interpret=interpret,
-    )(q_pad, r_pad, qlen_pad, rlen)
-    return out[:b, 0]
+    )(q_pad, r_pad, qlen_pad, rlen, bcol_pad, best_pad)
+    dist = out[:b, 0]
+    if return_carry:
+        return dist, (bound[:b], dist)
+    return dist

@@ -61,15 +61,21 @@ def _tropical_row_scan(a, u, big_val):
 
 
 def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
-                 out_ref, bound_ref):
+                 bcol_in_ref, best_in_ref, out_ref, bound_ref):
     """One (query_block, ref_tile) cell of the grid.
 
-    q_ref:    (block_q, N)   queries (VMEM)
-    r_ref:    (1, block_m)   reference tile (VMEM)
-    qlen_ref: (block_q, 1)   true query lengths
-    rlen_ref: (1, 1)         true reference length
-    out_ref:  (block_q, 1)   running per-query best (min over last valid row)
-    bound_ref:(block_q, N)   scratch: boundary column from the previous tile
+    q_ref:      (block_q, N)   queries (VMEM)
+    r_ref:      (1, block_m)   reference tile (VMEM)
+    qlen_ref:   (block_q, 1)   true query lengths
+    rlen_ref:   (1, 1)         true reference length
+    bcol_in_ref:(block_q, N)   carry in: boundary column entering this call
+                               (BIG for a fresh start)
+    best_in_ref:(block_q, 1)   carry in: running per-query best
+    out_ref:    (block_q, 1)   running per-query best (min over last valid row)
+    bound_ref:  (block_q, N)   output: boundary column — seeded from the
+                               previous *reference slice* (chunk-carry
+                               protocol), threaded between tiles, and
+                               returned as the carry for the next slice
     """
     t = pl.program_id(1)
     acc = out_ref.dtype
@@ -84,7 +90,8 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
 
     @pl.when(t == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, BIG)
+        out_ref[...] = best_in_ref[...]
+        bound_ref[...] = bcol_in_ref[...]
 
     best0 = out_ref[...]                             # (bq, 1)
 
@@ -96,7 +103,6 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
 
         # Boundary from the previous tile, row i (read BEFORE overwrite).
         b_row = jax.lax.dynamic_slice_in_dim(bound_ref[...], i, 1, axis=1)
-        b_row = jnp.where(t == 0, BIG, b_row)        # (bq, 1)
 
         # prev shifted right by one lane; lane 0 takes the diagonal boundary.
         prev_sh = jnp.pad(prev, ((0, 0), (1, 0)),
@@ -116,8 +122,13 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         row_min = jnp.min(s, axis=1, keepdims=True)
         best = jnp.where(i == qlen - 1, jnp.minimum(best, row_min), best)
 
-        # Persist this tile's last column as the next tile's boundary.
-        new_b = s[:, block_m - 1:block_m]
+        # Persist this tile's last *valid* column as the next boundary (the
+        # returned carry must be S[:, rlen-1], not a BIG padding lane, for
+        # cross-call chaining to be exact); a tile past rlen keeps b_row.
+        last_local = jnp.clip(rlen - 1 - t * block_m, 0, block_m - 1)
+        sel = lax.broadcasted_iota(jnp.int32, s.shape, 1) == last_local
+        new_b = jnp.min(jnp.where(sel, s, BIG), axis=1, keepdims=True)
+        new_b = jnp.where(t * block_m < rlen, new_b, b_row)
         bound_new = jax.lax.dynamic_update_slice_in_dim(
             bound_ref[...], new_b, i, axis=1)
         bound_ref[...] = bound_new

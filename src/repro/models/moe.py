@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .layers import normal_init
 
 
@@ -178,7 +180,7 @@ def moe_mlp(params, cfg, x, axes=None):
         aux = lax.pmean(aux, all_axes)
         return out.reshape(bl, sl, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(), w_expert_spec, w_expert_spec, w_expert_spec),
         out_specs=(x_spec, P()),

@@ -22,6 +22,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import checkpoint as ckpt
+from repro.compat import shard_map
 from repro.configs import get_arch
 from repro.distributed import Axes
 from repro.distributed.collectives import compressed_psum
@@ -85,7 +86,7 @@ print("3 OK: MoE replicated decode path matches reference")
 vals = jax.random.normal(jax.random.PRNGKey(2), (8, 64), jnp.float32)
 flat_mesh = make_mesh((8,), ("d",))
 with flat_mesh:
-    got = jax.jit(jax.shard_map(
+    got = jax.jit(shard_map(
         lambda v: compressed_psum(v[0], "d")[None],
         mesh=flat_mesh, in_specs=P("d", None), out_specs=P("d", None),
         check_vma=False))(vals)
@@ -159,5 +160,25 @@ with pp_mesh:
     got = pipeline_apply(block, staged, xm, pp_mesh, "stage")
 np.testing.assert_allclose(np.asarray(got), np.asarray(seq), atol=1e-5)
 print("7 OK: GPipe pipeline matches sequential execution")
+
+# --- 8. sharded sDTW engine (reference axis over 8 devices) --------------
+from repro.core import sdtw as engine_sdtw
+from repro.core.sdtw_ref import sdtw_ref
+from repro.distributed.sdtw_sharded import default_mesh
+
+rng8 = np.random.default_rng(42)
+ref_mesh = default_mesh("ref")
+assert ref_mesh.shape["ref"] == 8
+for dtype in (np.int32, np.float32):
+    qs8 = rng8.integers(-40, 40, (8, 6)).astype(dtype)
+    r8 = rng8.integers(-40, 40, 97).astype(dtype)   # 97: not divisible by 8
+    got8 = np.asarray(engine_sdtw(jnp.asarray(qs8), jnp.asarray(r8),
+                                  mesh=ref_mesh, chunk=8))
+    want8 = np.array([sdtw_ref(qs8[i], r8) for i in range(8)])
+    if dtype == np.int32:
+        np.testing.assert_array_equal(got8, want8)
+    else:
+        np.testing.assert_allclose(got8, want8, rtol=1e-5)
+print("8 OK: sharded sDTW (ppermute boundary-column exchange) matches oracle")
 
 print("DISTRIBUTED_ALL_OK")

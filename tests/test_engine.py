@@ -1,0 +1,210 @@
+"""The unified sDTW engine: dispatch rules, ragged bucketing, chunked
+reference streaming (oracle sweeps incl. boundary/saturation adversaries),
+and the Pallas chunk-carry protocol."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import choose_impl, sdtw, sdtw_batch, sdtw_chunked, sdtw_ref
+from repro.core.distances import INT_BIG
+from repro.core.engine import CHUNK_THRESHOLD, MIN_BUCKET, bucketize
+from repro.kernels.sdtw import sdtw_pallas
+
+
+# ---------------------------------------------------------------------------
+# Chunked reference streaming vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_chunked_matches_oracle(metric, dtype, rng):
+    """chunk ≪ M, M not a multiple of the chunk — the acceptance sweep:
+    bitwise for int32, rtol 1e-5 for float32, both metrics."""
+    nq, n, m, chunk = 4, 9, 151, 16          # 151 = 9*16 + 7
+    q = rng.integers(-40, 40, (nq, n)).astype(dtype)
+    r = rng.integers(-40, 40, m).astype(dtype)
+    got = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), impl="chunked",
+                          chunk=chunk, metric=metric))
+    want = np.array([sdtw_ref(q[i], r, metric) for i in range(nq)])
+    if dtype == np.int32:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_chunk_size_invariance(rng):
+    """Tiling must not change the answer — including chunk > M, chunk | M,
+    chunk ∤ M, and chunk = 1 (pure column streaming)."""
+    q = rng.integers(-40, 40, (3, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 137).astype(np.int32)
+    outs = [np.asarray(sdtw_chunked(jnp.asarray(q), jnp.asarray(r),
+                                    chunk=c)) for c in (1, 5, 8, 137, 1024)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_chunk_boundary_mid_warp_path(rng):
+    """An exact subsequence match straddling several chunk boundaries must
+    still be found with distance 0 (the warp path crosses tiles)."""
+    r = rng.integers(-50, 50, 100).astype(np.int32)
+    q = r[37:59]                              # spans chunks of size 8
+    got = float(sdtw(jnp.asarray(q), jnp.asarray(r), impl="chunked", chunk=8))
+    assert got == 0.0
+    assert sdtw_ref(q, r) == 0.0
+
+
+def test_int32_saturation_across_chunk_boundary(rng):
+    """Saturated (≥ INT_BIG) partial paths crossing a chunk boundary must
+    stay saturated — never wrap — and must not perturb the true optimum."""
+    m, chunk = 48, 16
+    # Per-cell square_diff = (2e4)^2 = 4e8 < INT_BIG ≈ 5.4e8, so a single
+    # cell is exact but any 2-cell path saturates — the largest regime the
+    # int32 lattice supports (pointwise distances themselves must fit).
+    r = np.full(m, 10_000, np.int32)
+    q = np.full(6, -10_000, np.int32)
+    # Plant an exact match right after a chunk boundary so the optimal path
+    # is finite while every other path has long saturated.
+    r[17:23] = q
+    got = int(sdtw(jnp.asarray(q), jnp.asarray(r), impl="chunked",
+                   chunk=chunk, metric="square_diff"))
+    assert got == 0
+    # And with no match planted, the result is the saturation ceiling (not a
+    # wrapped negative / garbage value).
+    r_bad = np.full(m, 10_000, np.int32)
+    sat = int(sdtw(jnp.asarray(jnp.asarray(q)), jnp.asarray(r_bad),
+                   impl="chunked", chunk=chunk, metric="square_diff"))
+    assert sat == INT_BIG
+    # Cross-check against the unchunked rowscan (identical lattice).
+    unchunked = int(sdtw(jnp.asarray(q), jnp.asarray(r_bad), impl="rowscan",
+                         metric="square_diff"))
+    assert sat == unchunked
+
+
+def test_chunked_qlens_and_exclusion(rng):
+    q = rng.integers(-40, 40, (3, 10)).astype(np.int32)
+    r = rng.integers(-40, 40, 61).astype(np.int32)
+    qlens = jnp.asarray([10, 3, 7], jnp.int32)
+    lo = jnp.asarray([5, -1, 20], jnp.int32)
+    hi = jnp.asarray([25, -1, 40], jnp.int32)
+    got = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), qlens,
+                          impl="chunked", chunk=8, excl_lo=lo, excl_hi=hi))
+    want = np.asarray(sdtw_batch(jnp.asarray(q), jnp.asarray(r), qlens,
+                                 "abs_diff", "rowscan", lo, hi))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Pallas chunk-carry protocol (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_pallas_carry_chaining_bitwise(rng):
+    """Two carry-chained pallas calls over reference slices == one call ==
+    the numpy oracle, bitwise (int32). Slice point deliberately not a
+    multiple of block_m."""
+    b, n, m, split = 3, 7, 53, 21
+    q = rng.integers(-40, 40, (b, n)).astype(np.int32)
+    r = rng.integers(-40, 40, m).astype(np.int32)
+    qj, rj = jnp.asarray(q), jnp.asarray(r)
+    one = np.asarray(sdtw_pallas(qj, rj, block_q=2, block_m=8))
+    _, carry = sdtw_pallas(qj, rj[:split], block_q=2, block_m=8,
+                           return_carry=True)
+    two = np.asarray(sdtw_pallas(qj, rj[split:], block_q=2, block_m=8,
+                                 carry=carry))
+    want = np.array([sdtw_ref(q[i], r) for i in range(b)])
+    np.testing.assert_array_equal(one, want)
+    np.testing.assert_array_equal(two, want)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-batch bucketed dispatch
+# ---------------------------------------------------------------------------
+
+def test_bucketize_grid():
+    buckets = bucketize([1, 3, 16, 17, 100, 16, 2])
+    assert set(buckets) == {MIN_BUCKET, 32, 128}
+    assert buckets[MIN_BUCKET] == [0, 1, 2, 5, 6]
+    assert buckets[32] == [3]
+    assert buckets[128] == [4]
+
+
+def test_ragged_mixed_dtypes_promote(rng):
+    """A bucket holding int32 and float32 queries must compute in the
+    promoted dtype, not silently truncate floats to the first query's."""
+    r = rng.integers(-10, 10, 40).astype(np.float32)
+    qi = rng.integers(-10, 10, 4).astype(np.int32)
+    qf = (rng.integers(-10, 10, 3) + 0.5).astype(np.float32)
+    got = np.asarray(sdtw([qi, qf], jnp.asarray(r)))
+    want = np.array([sdtw_ref(qi, r), sdtw_ref(qf, r)])
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_ragged_batch_matches_per_query(rng):
+    """Bucketed dispatch must equal per-query calls exactly, in the caller's
+    original order."""
+    r = rng.integers(-50, 50, 90).astype(np.int32)
+    lengths = [3, 17, 8, 120, 64, 5, 16, 33]
+    ragged = [rng.integers(-50, 50, L).astype(np.int32) for L in lengths]
+    got = np.asarray(sdtw(ragged, jnp.asarray(r)))
+    want = np.array([float(sdtw(jnp.asarray(q), jnp.asarray(r)))
+                     for q in ragged])
+    np.testing.assert_array_equal(got, want)
+    oracle = np.array([sdtw_ref(q, r) for q in ragged])
+    np.testing.assert_array_equal(got, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch rules + escape hatch
+# ---------------------------------------------------------------------------
+
+def test_auto_dispatch_rules():
+    assert choose_impl(8, 16, 4096, backend="cpu") == "rowscan"
+    assert choose_impl(8, 64, 100, backend="cpu") == "wavefront"
+    assert choose_impl(8, 16, CHUNK_THRESHOLD, backend="cpu") == "chunked"
+    assert choose_impl(8, 16, 64, backend="cpu", chunk=16) == "chunked"
+    assert choose_impl(8, 16, 4096, backend="tpu") == "pallas"
+    # The kernel's tile grid streams long references itself on TPU…
+    assert choose_impl(8, 16, CHUNK_THRESHOLD, backend="tpu") == "pallas"
+    # …but an explicit chunk= always forces streaming,
+    assert choose_impl(8, 16, CHUNK_THRESHOLD, backend="tpu",
+                       chunk=1024) == "chunked"
+    # and exclusion zones fall off the kernel path.
+    assert choose_impl(8, 16, CHUNK_THRESHOLD, backend="tpu",
+                       has_exclusion=True) == "chunked"
+    assert choose_impl(8, 16, 4096, backend="tpu",
+                       has_exclusion=True) == "rowscan"
+    assert choose_impl(8, 16, 4096, backend="cpu", mesh=object()) == "sharded"
+
+
+def test_one_sided_exclusion_rejected():
+    with pytest.raises(ValueError, match="together"):
+        sdtw(jnp.zeros((2, 4), jnp.int32), jnp.zeros(8, jnp.int32), excl_lo=5)
+
+
+def test_impl_escape_hatch_agrees(rng):
+    q = rng.integers(-40, 40, (4, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 70).astype(np.int32)
+    want = np.array([sdtw_ref(q[i], r) for i in range(4)])
+    for impl in ("rowscan", "wavefront", "pallas", "chunked"):
+        got = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), impl=impl,
+                              chunk=16))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_single_query_returns_scalar(rng):
+    q = rng.integers(-40, 40, 7).astype(np.int32)
+    r = rng.integers(-40, 40, 31).astype(np.int32)
+    d = sdtw(jnp.asarray(q), jnp.asarray(r))
+    assert d.ndim == 0
+    assert float(d) == sdtw_ref(q, r)
+
+
+def test_pallas_rejects_exclusion():
+    with pytest.raises(ValueError, match="exclusion"):
+        sdtw(jnp.zeros((2, 4), jnp.int32), jnp.zeros(8, jnp.int32),
+             impl="pallas", excl_lo=1, excl_hi=3)
+
+
+def test_bad_impl_rejected():
+    with pytest.raises(ValueError, match="impl"):
+        sdtw(jnp.zeros((1, 4), jnp.int32), jnp.zeros(8, jnp.int32),
+             impl="vibes")
