@@ -1,9 +1,17 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Harness contract: every benchmark module's ``main()`` *returns* a list of
+``(name, us_per_call, derived)`` rows; ``benchmarks.run`` owns all
+printing (and the ``--json`` trajectory dump). Run standalone, a module
+prints its own rows via ``print_rows``.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
+
+HEADER = "name,us_per_call,derived"
 
 
 def time_call(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
@@ -29,5 +37,21 @@ def _block(x):
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    """CSV row per the harness contract: name,us_per_call,derived."""
-    print(f"{name},{us_per_call:.2f},{derived}")
+    """Build one CSV row per the harness contract: name,us_per_call,derived."""
+    return (name, float(us_per_call), derived)
+
+
+def format_row(row) -> str:
+    name, us, derived = row
+    return f"{name},{us:.2f},{derived}"
+
+
+def print_rows(rows):
+    print(HEADER)
+    for row in rows:
+        print(format_row(row))
+
+
+def rows_to_json(rows):
+    return [{"name": n, "us_per_call": us, "derived": d}
+            for n, us, d in rows]

@@ -2,23 +2,26 @@
 NVM endurance limits (Table II)."""
 from repro.core import endurance_writes_per_cell
 
-from .common import emit
+from .common import emit, print_rows
 
 ENDURANCE = {"SOT-MRAM": 1e15, "STT-MRAM": 1e15, "FRAM": 1e15,
              "PCM": 1e7, "ReRAM": 1e5, "NAND": 1e5}
 
 
 def main():
+    rows = []
     w10 = endurance_writes_per_cell(years=10)
     per_s = w10 / (10 * 365.25 * 24 * 3600)
-    emit("endurance/writes_per_cell_10yr", 0.0,
-         f"model={w10:.2e};paper~4e9 (stricter hot-slice accounting)")
+    rows.append(emit(
+        "endurance/writes_per_cell_10yr", 0.0,
+        f"model={w10:.2e};paper~4e9 (stricter hot-slice accounting)"))
     for tech, limit in ENDURANCE.items():
         life_s = limit / per_s
         unit = (f"{life_s/3.156e7:.1f}yr" if life_s > 3.156e7
                 else f"{life_s/3600:.2f}h")
-        emit(f"endurance/{tech}", 0.0, f"lifetime={unit}")
+        rows.append(emit(f"endurance/{tech}", 0.0, f"lifetime={unit}"))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

@@ -2,13 +2,14 @@
 (ref=128K, query=8K, n_q=8K, cols=128K)."""
 from repro.core import MramParams, OpCounts, Workload, simulate
 
-from .common import emit
+from .common import emit, print_rows
 
 W = Workload(ref_size=131072, query_size=8192, num_queries=8192)
 COLS = 131072
 
 
 def main():
+    rows = []
     for preset in ("first_principles", "fig9_calibrated"):
         counts = OpCounts.derive(preset=preset)
         base = simulate(W, COLS, MramParams(read_ns=1, write_ns=1),
@@ -16,22 +17,23 @@ def main():
         for rd in (1, 3, 5, 10, 20):
             t = simulate(W, COLS, MramParams(read_ns=rd, write_ns=1),
                          counts).exec_time_s
-            emit(f"fig09/{preset}/rd_{rd}ns", t * 1e6,
-                 f"ratio_vs_1ns={t / base:.2f}")
+            rows.append(emit(f"fig09/{preset}/rd_{rd}ns", t * 1e6,
+                             f"ratio_vs_1ns={t / base:.2f}"))
         for wr in (1, 3, 5, 10, 20):
             t = simulate(W, COLS, MramParams(read_ns=1, write_ns=wr),
                          counts).exec_time_s
-            emit(f"fig09/{preset}/wr_{wr}ns", t * 1e6,
-                 f"ratio_vs_1ns={t / base:.2f}")
+            rows.append(emit(f"fig09/{preset}/wr_{wr}ns", t * 1e6,
+                             f"ratio_vs_1ns={t / base:.2f}"))
     # Paper Key Obs 3 endpoints: 10× rd → 4.7×, 10× wr → 6.5×.
     c = OpCounts.derive(preset="fig9_calibrated")
     r10 = simulate(W, COLS, MramParams(10, 1), c).exec_time_s / \
         simulate(W, COLS, MramParams(1, 1), c).exec_time_s
     w10 = simulate(W, COLS, MramParams(1, 10), c).exec_time_s / \
         simulate(W, COLS, MramParams(1, 1), c).exec_time_s
-    emit("fig09/key3_rd10x", 0.0, f"model={r10:.2f} paper=4.7")
-    emit("fig09/key3_wr10x", 0.0, f"model={w10:.2f} paper=6.5")
+    rows.append(emit("fig09/key3_rd10x", 0.0, f"model={r10:.2f} paper=4.7"))
+    rows.append(emit("fig09/key3_wr10x", 0.0, f"model={w10:.2f} paper=6.5"))
+    return rows
 
 
-if __name__ == "__main__":
-    main()
+if __name__ == '__main__':
+    print_rows(main())

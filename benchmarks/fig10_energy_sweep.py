@@ -2,23 +2,27 @@
 (read 45% / write 55% split at the 50/70 pJ operating point)."""
 from repro.core import MramParams, Workload, simulate
 
-from .common import emit
+from .common import emit, print_rows
 
 W = Workload(ref_size=131072, query_size=8192, num_queries=8192)
 COLS = 131072
 
 
 def main():
+    rows = []
     for rd_pj in (20, 50, 100):
         r = simulate(W, COLS, MramParams(read_pj=rd_pj))
-        emit(f"fig10/rd_{rd_pj}pJ", 0.0, f"energy_j={r.energy_j:.3f}")
+        rows.append(emit(f"fig10/rd_{rd_pj}pJ", 0.0,
+                         f"energy_j={r.energy_j:.3f}"))
     for wr_pj in (30, 70, 400):
         r = simulate(W, COLS, MramParams(write_pj=wr_pj))
-        emit(f"fig10/wr_{wr_pj}pJ", 0.0, f"energy_j={r.energy_j:.3f}")
+        rows.append(emit(f"fig10/wr_{wr_pj}pJ", 0.0,
+                         f"energy_j={r.energy_j:.3f}"))
     base = simulate(W, COLS)
-    emit("fig10/key4_read_frac", 0.0,
-         f"model={base.read_energy_frac:.3f} paper=0.45")
+    rows.append(emit("fig10/key4_read_frac", 0.0,
+                     f"model={base.read_energy_frac:.3f} paper=0.45"))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

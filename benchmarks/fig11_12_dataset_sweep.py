@@ -2,23 +2,27 @@
 (num_queries=8K, cols=128K) + Key Obs 5 (proportional to ref×query)."""
 from repro.core import Workload, simulate
 
-from .common import emit
+from .common import emit, print_rows
 
 COLS = 131072
 
 
 def main():
+    rows = []
     for ref in (65536, 131072, 262144, 524288):
         for q in (4096, 8192, 16384, 32768):
             r = simulate(Workload(ref, q, 8192), COLS)
-            emit(f"fig11_12/ref_{ref//1024}K_q_{q//1024}K", 0.0,
-                 f"time_s={r.exec_time_s:.2f};energy_j={r.energy_j:.2f}")
+            rows.append(emit(
+                f"fig11_12/ref_{ref//1024}K_q_{q//1024}K", 0.0,
+                f"time_s={r.exec_time_s:.2f};energy_j={r.energy_j:.2f}"))
     a = simulate(Workload(65536, 4096, 8192), COLS)
     b = simulate(Workload(262144, 16384, 8192), COLS)   # 16× the cells
-    emit("fig11_12/key5_16x_cells", 0.0,
-         f"time_ratio={b.exec_time_s/a.exec_time_s:.2f};"
-         f"energy_ratio={b.energy_j/a.energy_j:.2f};expected=16")
+    rows.append(emit(
+        "fig11_12/key5_16x_cells", 0.0,
+        f"time_ratio={b.exec_time_s/a.exec_time_s:.2f};"
+        f"energy_ratio={b.energy_j/a.energy_j:.2f};expected=16"))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

@@ -3,21 +3,23 @@
 from repro.core import Workload, simulate
 from repro.core.pum_model import CROSSBAR_DIM, SWEEP
 
-from .common import emit
+from .common import emit, print_rows
 
 W = Workload(ref_size=131072, query_size=8192, num_queries=8192)
 
 
 def main():
+    rows = []
     prev = None
     for xbars in SWEEP["num_crossbars"]:
         cols = xbars * CROSSBAR_DIM
         r = simulate(W, cols)
         speedup = "" if prev is None else f"step_speedup={prev/r.exec_time_s:.2f}"
-        emit(f"fig13/{xbars}xbars_{cols//1024}Kcols", 0.0,
-             f"time_s={r.exec_time_s:.2f};{speedup}")
+        rows.append(emit(f"fig13/{xbars}xbars_{cols//1024}Kcols", 0.0,
+                         f"time_s={r.exec_time_s:.2f};{speedup}"))
         prev = r.exec_time_s
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

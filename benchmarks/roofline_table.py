@@ -9,7 +9,7 @@ import glob
 import json
 import os
 
-from .common import emit
+from .common import emit, print_rows
 
 SUGGEST = {
     ("compute",): "raise MXU occupancy: larger per-chip tiles, fewer pads",
@@ -32,6 +32,7 @@ def suggestion(rec):
 
 
 def main(write_md: bool = True):
+    csv_rows = []
     rows = []
     for fn in sorted(glob.glob("experiments/dryrun/16x16__*.json")):
         rec = json.load(open(fn))
@@ -42,12 +43,13 @@ def main(write_md: bool = True):
         rows.append((rec["arch"], rec["shape"], rec["roofline"],
                      suggestion(rec)))
         r = rec["roofline"]
-        emit(f"roofline/{rec['arch']}/{rec['shape']}",
-             r["bound_time_s"] * 1e6,
-             f"dom={r['dominant']};c={r['compute_s']:.3e};"
-             f"m={r['memory_s']:.3e};x={r['collective_s']:.3e};"
-             f"useful={r['useful_flops_ratio']:.2f};"
-             f"roofline_frac={r['roofline_fraction']:.3f}")
+        csv_rows.append(emit(
+            f"roofline/{rec['arch']}/{rec['shape']}",
+            r["bound_time_s"] * 1e6,
+            f"dom={r['dominant']};c={r['compute_s']:.3e};"
+            f"m={r['memory_s']:.3e};x={r['collective_s']:.3e};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.3f}"))
 
     if write_md and rows:
         lines = [
@@ -68,7 +70,8 @@ def main(write_md: bool = True):
         os.makedirs("experiments", exist_ok=True)
         with open("experiments/roofline_table.md", "w") as f:
             f.write("\n".join(lines) + "\n")
+    return csv_rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

@@ -1,20 +1,60 @@
 """Benchmark harness entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+
+Every sub-benchmark's ``main()`` returns ``(name, us_per_call, derived)``
+rows; this driver prints the single CSV stream and optionally dumps the
+same rows as JSON (``--json out.json``) so bench trajectories
+(``BENCH_*.json``) can be recorded per commit. ``--smoke`` shrinks the
+compute-heavy benches to tiny shapes for the CI bench-smoke job;
+``--only`` selects a comma-separated subset by module name.
+"""
+import argparse
+import json
 
 
-def main() -> None:
-    from . import (fig09_latency_sweep, fig10_energy_sweep,
-                   fig11_12_dataset_sweep, fig13_scaling, table6_speedups,
-                   sdtw_kernel_bench, roofline_table, endurance)
-    print("name,us_per_call,derived")
-    fig09_latency_sweep.main()
-    fig10_energy_sweep.main()
-    fig11_12_dataset_sweep.main()
-    fig13_scaling.main()
-    table6_speedups.main()
-    endurance.main()
-    sdtw_kernel_bench.main()
-    roofline_table.main()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write rows as JSON to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the compute-heavy benches")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. "
+                         "'search_bench,sdtw_kernel_bench')")
+    args = ap.parse_args(argv)
+
+    from . import (common, endurance, fig09_latency_sweep, fig10_energy_sweep,
+                   fig11_12_dataset_sweep, fig13_scaling, roofline_table,
+                   sdtw_kernel_bench, search_bench, table6_speedups)
+    mods = [
+        ("fig09_latency_sweep", fig09_latency_sweep.main),
+        ("fig10_energy_sweep", fig10_energy_sweep.main),
+        ("fig11_12_dataset_sweep", fig11_12_dataset_sweep.main),
+        ("fig13_scaling", fig13_scaling.main),
+        ("table6_speedups", table6_speedups.main),
+        ("endurance", endurance.main),
+        ("sdtw_kernel_bench",
+         lambda: sdtw_kernel_bench.main(smoke=args.smoke)),
+        ("search_bench", lambda: search_bench.main(smoke=args.smoke)),
+        ("roofline_table", roofline_table.main),
+    ]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",")}
+        unknown = wanted - {name for name, _ in mods}
+        if unknown:
+            raise SystemExit(f"unknown benchmarks: {sorted(unknown)}")
+        mods = [(n, f) for n, f in mods if n in wanted]
+
+    rows = []
+    print(common.HEADER)
+    for _, fn in mods:
+        for row in fn():
+            print(common.format_row(row))
+            rows.append(row)
+
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(common.rows_to_json(rows), f, indent=1)
+    return rows
 
 
 if __name__ == '__main__':

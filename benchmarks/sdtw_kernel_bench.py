@@ -5,7 +5,11 @@ tropical row-scan, the Pallas kernel (interpret mode on CPU — its TPU
 performance is projected by the roofline, not measured here), and the
 unified engine's chunked-streaming path on a long reference (the regime of
 the paper's Seismology/Power/ECG workloads, M ≈ 1.7–1.8M). Feeds
-EXPERIMENTS.md §Perf (paper-faithful baseline vs optimized, measured)."""
+EXPERIMENTS.md §Perf (paper-faithful baseline vs optimized, measured).
+
+``smoke=True`` shrinks every shape so the bench-smoke CI job exercises the
+full code path in seconds.
+"""
 import functools
 
 import jax
@@ -15,12 +19,13 @@ import numpy as np
 from repro.core import sdtw, sdtw_batch
 from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
 
-from .common import emit, time_call
+from .common import emit, print_rows, time_call
 
 
-def main():
+def main(smoke: bool = False):
+    rows = []
     rng = np.random.default_rng(0)
-    b, n, m = 8, 64, 4096
+    b, n, m = (2, 16, 256) if smoke else (8, 64, 4096)
     q = jnp.asarray(rng.integers(-100, 100, (b, n)).astype(np.int32))
     r = jnp.asarray(rng.integers(-100, 100, m).astype(np.int32))
 
@@ -31,7 +36,7 @@ def main():
         "rowscan_tropical": functools.partial(
             sdtw_batch, q, r, impl="rowscan"),
         "pallas_interpret": functools.partial(
-            sdtw_pallas, q, r, block_q=8, block_m=512),
+            sdtw_pallas, q, r, block_q=8, block_m=128 if smoke else 512),
         "engine_auto": functools.partial(sdtw, q, r),
     }
     base = None
@@ -40,24 +45,27 @@ def main():
         cells = b * n * m
         rate = cells / (us * 1e-6) / 1e6
         speedup = "" if base is None else f";speedup_vs_naive={base/us:.1f}x"
-        emit(f"sdtw_kernel/{name}_b{b}_n{n}_m{m}", us,
-             f"Mcells_per_s={rate:.1f}{speedup}")
+        rows.append(emit(f"sdtw_kernel/{name}_b{b}_n{n}_m{m}", us,
+                         f"Mcells_per_s={rate:.1f}{speedup}"))
         if base is None:
             base = us
 
     # Long-reference sweep: engine chunked streaming, M ≥ 256K in bounded
     # memory (only the (b, N) boundary column crosses chunk boundaries).
-    bl, nl, ml = 4, 32, 1 << 18
+    bl, nl, ml = (2, 8, 4096) if smoke else (4, 32, 1 << 18)
     ql = jnp.asarray(rng.integers(-100, 100, (bl, nl)).astype(np.int32))
     rl = jnp.asarray(rng.integers(-100, 100, ml).astype(np.int32))
-    for chunk in (8192, 32768):
+    chunks = (512, 1024) if smoke else (8192, 32768)
+    for chunk in chunks:
         fn = functools.partial(sdtw, ql, rl, impl="chunked", chunk=chunk)
         us = time_call(fn, repeats=3, warmup=1)
         cells = bl * nl * ml
         rate = cells / (us * 1e-6) / 1e6
-        emit(f"sdtw_kernel/engine_chunked_b{bl}_n{nl}_m{ml}_c{chunk}", us,
-             f"Mcells_per_s={rate:.1f}")
+        rows.append(emit(
+            f"sdtw_kernel/engine_chunked_b{bl}_n{nl}_m{ml}_c{chunk}", us,
+            f"Mcells_per_s={rate:.1f}"))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

@@ -1,0 +1,84 @@
+"""Top-K pruned search benchmark: the LB cascade vs exhaustive streaming.
+
+Reference: piecewise level-shifted noise — the heterogeneous regime the
+envelope bounds are built for (quiet vs active segments; a homogeneous
+periodic reference defeats interval bounds and is served by the exact
+path). Queries are planted matches, so the pruned top-1 is checked
+bitwise against the exhaustive engine answer inside the bench — CI fails
+on divergence, not just on slowness.
+
+Derived fields include ``pruned=<kim+keogh>/<total>`` — the bench-smoke CI
+job asserts at least one row prunes at least one chunk.
+"""
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sdtw
+from repro.search import EnvelopeCache, search_topk
+
+from .common import emit, print_rows, time_call
+
+
+def _heterogeneous_reference(rng, m: int, seg: int):
+    levels = rng.integers(-1500, 1500, -(-m // seg))
+    ref = np.concatenate([
+        lvl + rng.normal(0, 40, seg) for lvl in levels])[:m]
+    return ref.astype(np.int32)
+
+
+def main(smoke: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    m, n, nq, chunk = (2048, 32, 2, 128) if smoke else (65536, 128, 8, 2048)
+    ref = _heterogeneous_reference(rng, m, 8 * chunk // 4)
+    starts = rng.integers(0, m - n, nq)
+    queries = np.stack([
+        ref[s:s + n] + rng.integers(-2, 3, n).astype(np.int32)
+        for s in starts])
+    refj, qj = jnp.asarray(ref), jnp.asarray(queries)
+    k = 3
+    cache = EnvelopeCache()
+
+    # Exhaustive baseline (engine streaming top-K, no bounds).
+    us_full = time_call(functools.partial(
+        search_topk, qj, refj, k, chunk=chunk, prune=False))
+    rows.append(emit(f"search/exhaustive_nq{nq}_n{n}_m{m}_k{k}", us_full,
+                     f"pruned=0/{-(-m // chunk)}"))
+
+    # Pruned cascade (envelope cached across repeats, as in serving).
+    res = search_topk(qj, refj, k, chunk=chunk, cache=cache, ref_key="bench")
+    us_pruned = time_call(functools.partial(
+        search_topk, qj, refj, k, chunk=chunk, cache=cache,
+        ref_key="bench"))
+    rows.append(emit(
+        f"search/pruned_nq{nq}_n{n}_m{m}_k{k}", us_pruned,
+        f"pruned={res.chunks_pruned}/{res.chunks_total};"
+        f"kim={res.chunks_pruned_kim};keogh={res.chunks_pruned_keogh};"
+        f"speedup_vs_exhaustive={us_full / us_pruned:.2f}x"))
+
+    # Correctness gate: pruned top-1 must equal the engine bitwise.
+    want = np.asarray(sdtw(qj, refj))
+    got = np.asarray(res.distances)[:, 0]
+    if not np.array_equal(got, want):
+        raise AssertionError(
+            f"pruned top-1 diverged from engine: {got} vs {want}")
+    rows.append(emit(f"search/pruned_top1_oracle_nq{nq}", 0.0,
+                     "bitwise_equal=yes"))
+
+    # Single-query latency (the serving hot path; per-query thresholds
+    # prune hardest with a batch of one).
+    res1 = search_topk(qj[0], refj, k, chunk=chunk, cache=cache,
+                       ref_key="bench")
+    us1 = time_call(functools.partial(
+        search_topk, qj[0], refj, k, chunk=chunk, cache=cache,
+        ref_key="bench"))
+    rows.append(emit(
+        f"search/pruned_single_n{n}_m{m}_k{k}", us1,
+        f"pruned={res1.chunks_pruned}/{res1.chunks_total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(main())

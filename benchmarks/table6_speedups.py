@@ -6,10 +6,11 @@ import statistics
 from repro.core import (PAPER_TABLE6, PLATFORMS, VERSIONS, Workload,
                         load_real_workload_shapes, simulate)
 
-from .common import emit
+from .common import emit, print_rows
 
 
 def main():
+    rows = []
     shapes = load_real_workload_shapes()
     for (ver, plat), (want_sp, want_en) in sorted(PAPER_TABLE6.items()):
         v, p = VERSIONS[ver], PLATFORMS[plat]
@@ -19,15 +20,18 @@ def main():
             r = simulate(w, v.compute_columns)
             sp.append(p.exec_time_s(w) / r.exec_time_s)
             en.append(p.energy_j(w) / r.energy_j)
-            emit(f"table6/{ver}/{plat}/{name}", r.exec_time_s * 1e6,
-                 f"speedup={sp[-1]:.2f};energy_x={en[-1]:.2f}")
+            rows.append(emit(
+                f"table6/{ver}/{plat}/{name}", r.exec_time_s * 1e6,
+                f"speedup={sp[-1]:.2f};energy_x={en[-1]:.2f}"))
         gsp = statistics.geometric_mean(sp)
         gen = statistics.geometric_mean(en)
-        emit(f"table6/{ver}/{plat}/GEOMEAN", 0.0,
-             f"speedup={gsp:.2f} (paper {want_sp});"
-             f"energy_x={gen:.2f} (paper {want_en});"
-             f"dev={100*(gsp/want_sp-1):+.1f}%/{100*(gen/want_en-1):+.1f}%")
+        rows.append(emit(
+            f"table6/{ver}/{plat}/GEOMEAN", 0.0,
+            f"speedup={gsp:.2f} (paper {want_sp});"
+            f"energy_x={gen:.2f} (paper {want_en});"
+            f"dev={100*(gsp/want_sp-1):+.1f}%/{100*(gen/want_en-1):+.1f}%"))
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    print_rows(main())

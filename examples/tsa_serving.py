@@ -1,9 +1,12 @@
 """End-to-end serving driver (the paper's kind: a TSA inference service).
 
-Serves batched sDTW queries against a long reference — the MATSA deployment
-scenario — using all three execution schemes, verifying they agree, and
-reporting throughput. The sDTW "model" here plays the role a transformer
-plays in the LM examples: batched requests in, per-request results out.
+Phase 1 verifies the execution schemes agree on a batch of queries
+(rowscan / wavefront / pallas — the correctness gate every deployment
+runs at startup). Phase 2 is the actual serving loop: batched requests →
+top-K match positions via ``repro.search.search_topk``, with the
+per-reference envelope cached across requests (the reference is
+long-lived; queries stream in) and the LB cascade pruning chunks that
+cannot beat each request's running matches.
 
 Run:  PYTHONPATH=src python examples/tsa_serving.py [--queries 64]
 """
@@ -14,13 +17,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import matsa, sdtw_batch, synthetic_timeseries
+from repro.core import sdtw_batch, synthetic_timeseries
 from repro.kernels.sdtw import sdtw_pallas
+from repro.search import EnvelopeCache, search_topk
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--queries", type=int, default=32)
 ap.add_argument("--query-len", type=int, default=48)
-ap.add_argument("--ref-len", type=int, default=2048)
+ap.add_argument("--ref-len", type=int, default=4096)
+ap.add_argument("--requests", type=int, default=4,
+                help="serving-loop request batches")
+ap.add_argument("--top-k", type=int, default=3)
 args = ap.parse_args()
 
 rng = np.random.default_rng(0)
@@ -33,6 +40,7 @@ queries = jnp.asarray(
 print(f"serving {args.queries} queries (len {args.query_len}) against "
       f"a {args.ref_len}-point reference")
 
+# --- phase 1: the execution schemes agree (startup correctness gate) -----
 results = {}
 for name, fn in {
     "rowscan": lambda: sdtw_batch(queries, reference, impl="rowscan"),
@@ -56,3 +64,35 @@ thr = float(np.percentile(d, 75))
 flagged = np.where(d > thr)[0]
 print(f"{len(flagged)} queries flagged as anomalous (thr={thr:.0f}): "
       f"{flagged[:10].tolist()}{'…' if len(flagged) > 10 else ''}")
+
+# --- phase 2: request → top-K matches loop (the search front door) -------
+print(f"\nserving loop: {args.requests} request batches → top-{args.top_k} "
+      "matches each")
+cache = EnvelopeCache()
+per_batch = max(1, args.queries // args.requests)
+for req in range(args.requests):
+    # Each "request" carries a fresh batch of queries from the stream.
+    batch = jnp.asarray(synthetic_timeseries(
+        rng, per_batch * args.query_len, anomaly_rate=0.4)
+        .reshape(per_batch, args.query_len))
+    t0 = time.perf_counter()
+    res = search_topk(batch, reference, k=args.top_k, cache=cache,
+                      ref_key="stream")
+    jax.block_until_ready(res.distances)
+    dt = time.perf_counter() - t0
+    best_d = np.asarray(res.distances)[:, 0]
+    best_p = np.asarray(res.positions)[:, 0]
+    print(f"  req {req}: {dt*1e3:7.2f} ms  "
+          f"pruned {res.chunks_pruned}/{res.chunks_total} chunks "
+          f"(envelope cache {cache.hits} hits)  "
+          f"best match d={best_d.min()} @ ref[{best_p[best_d.argmin()]}]")
+
+# The engine and the search front door agree on the best distance.
+# (prune=False: the exact streaming path — unconditional, so the gate
+# holds for any --ref-len/--query-len, not just spans within span_cap.)
+check = np.asarray(search_topk(queries, reference, k=1, cache=cache,
+                               ref_key="stream",
+                               prune=False).distances)[:, 0]
+assert np.array_equal(check, d), "search_topk top-1 diverged from engine"
+print(f"search top-1 == engine distances ✓ "
+      f"(envelope computed {cache.misses}×, reused {cache.hits}×)")

@@ -9,6 +9,7 @@ from .platforms import PAPER_TABLE6, PLATFORMS, PlatformModel
 from .sdtw import (sdtw_batch, sdtw_chunked, sdtw_rowscan, sdtw_wavefront,
                    self_join_windows)
 from .sdtw_ref import dtw_ref, sdtw_matrix, sdtw_ref
+from .topk import topk_init, topk_merge, topk_select
 
 __all__ = [
     "sdtw", "choose_impl", "sdtw_chunked",
@@ -20,4 +21,5 @@ __all__ = [
     "PLATFORMS", "PAPER_TABLE6", "PlatformModel",
     "sdtw_batch", "sdtw_rowscan", "sdtw_wavefront", "self_join_windows",
     "sdtw_ref", "sdtw_matrix", "dtw_ref",
+    "topk_init", "topk_merge", "topk_select",
 ]

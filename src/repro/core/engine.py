@@ -26,7 +26,24 @@ Dispatch rules (``impl="auto"``):
      depth N+M-1 ≈ cheap; avoids the associative-scan constant).
   6. otherwise                                     → rowscan.
 
-``impl=`` is an escape hatch that forces any of the five paths.
+``impl=`` is an escape hatch that forces any of the five paths. Forcing a
+path makes argument precedence *explicit*: arguments that belong to a
+different path are rejected instead of silently ignored —
+``impl='rowscan'`` (or ``'wavefront'``) with ``mesh=`` or ``chunk=`` is a
+``ValueError``, as is ``mesh=`` with any non-sharded forced impl. The one
+deliberate combination is ``impl='pallas'`` with ``chunk=``: the reference
+is streamed through the kernel in ``chunk``-sized slices via the kernel's
+chunk-carry protocol (one kernel launch per slice), which is how a
+TPU-resident caller bounds the per-launch reference footprint.
+
+Top-K search mode: ``top_k=k`` returns the k best *match end positions*
+per query, ``(dists (nq, k), positions (nq, k))``, best first, with an
+exclusion zone (``excl_zone``, default: half of each query's true
+length) keeping the matches
+non-trivially distinct; the heap rides the chunk boundary carry
+(streaming/sharded paths). ``return_positions=True`` alone returns the
+top-1 pair ``(dists (nq,), positions (nq,))`` and is supported on every
+path (the Pallas kernel tracks the best end position in its carry).
 
 Ragged batches: a *list* of 1-D queries with mixed lengths is bucketed —
 each query is padded up to the next power-of-two length (min
@@ -53,11 +70,15 @@ MIN_BUCKET = 16             # smallest ragged-batch padded length
 
 def choose_impl(nq: int, n: int, m: int, *, backend: Optional[str] = None,
                 mesh=None, chunk: Optional[int] = None,
-                has_exclusion: bool = False) -> str:
+                has_exclusion: bool = False,
+                top_k: Optional[int] = None) -> str:
     """The ``impl="auto"`` dispatch rule (documented in the module docstring,
     exercised directly by the tests)."""
     if mesh is not None:
         return "sharded"
+    if top_k is not None:
+        # The top-K heap rides the chunk boundary carry — streaming path.
+        return "chunked"
     if chunk is not None:
         return "chunked"
     backend = jax.default_backend() if backend is None else backend
@@ -91,9 +112,43 @@ def _normalize_excl(val, nq: int):
     return arr
 
 
+def _check_forced_impl(impl: str, *, mesh, chunk, top_k):
+    """Explicit precedence for forced impls: reject contradictory args
+    instead of silently ignoring them."""
+    if impl in ("rowscan", "wavefront"):
+        if mesh is not None:
+            raise ValueError(
+                f"impl={impl!r} is an in-core path but mesh= requests the "
+                "sharded driver; drop mesh= or use impl='sharded'/'auto'")
+        if chunk is not None:
+            raise ValueError(
+                f"impl={impl!r} runs in-core and would ignore chunk=; drop "
+                "chunk= or use impl='chunked'/'pallas' for streaming")
+        if top_k is not None:
+            raise ValueError(
+                f"impl={impl!r} does not carry a top-K heap; top_k= runs on "
+                "the chunked/sharded streaming paths (impl='auto' routes it)")
+    elif impl == "pallas":
+        if mesh is not None:
+            raise ValueError(
+                "impl='pallas' is single-device; drop mesh= or use "
+                "impl='sharded'/'auto'")
+        if top_k is not None:
+            raise ValueError(
+                "the pallas kernel tracks only the best end position "
+                "(return_positions=True); top_k= runs on the chunked/"
+                "sharded streaming paths")
+    elif impl == "chunked" and mesh is not None:
+        raise ValueError(
+            "impl='chunked' is single-device; drop mesh= or use "
+            "impl='sharded'/'auto'")
+
+
 def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
          impl: str = "auto", chunk: Optional[int] = None,
          excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
+         top_k: Optional[int] = None, return_positions: bool = False,
+         excl_zone: Optional[int] = None,
          block_q: int = 8, block_m: int = 512):
     """Subsequence-DTW distances of ``queries`` against ``reference``.
 
@@ -104,29 +159,44 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
       qlens:     (nq,) true query lengths for padded 2-D input.
       metric:    'abs_diff' | 'square_diff'.
       impl:      one of ``IMPLS``; 'auto' applies the dispatch rules above.
-      chunk:     reference tile size for the chunked/sharded paths; setting
-                 it forces streaming under 'auto'.
+                 A forced impl rejects arguments belonging to another path.
+      chunk:     reference tile size for the chunked/sharded paths (forces
+                 streaming under 'auto'); with ``impl='pallas'`` the
+                 reference is streamed through the kernel in chunk-sized
+                 slices via the kernel carry.
       excl_lo/excl_hi: banned reference column range per query (self-join
                  exclusion zones); scalar or (nq,).
       mesh:      a jax Mesh whose ``ref_axis`` shards the reference axis;
                  forces the sharded driver under 'auto'.
+      top_k:     return the k best match end positions per query as
+                 ``(dists (nq, k), positions (nq, k))``, best first,
+                 suppressed so positions are > ``excl_zone`` apart.
+      return_positions: return ``(dists, end_positions)`` (top-1); without
+                 ``top_k`` this works on every impl.
+      excl_zone: top-K suppression radius; scalar, or default half of
+                 each query's true length.
       block_q/block_m: Pallas kernel block shape.
 
     Returns: (nq,) distances in the accumulator dtype — scalar for a single
-    1-D query.
+    1-D query; a (dists, positions) pair in the top-K/positions modes.
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
     if (excl_lo is None) != (excl_hi is None):
         raise ValueError("excl_lo and excl_hi must be given together "
                          "(a one-sided zone would silently ban nothing)")
+    if top_k is not None and (not isinstance(top_k, int) or top_k < 1):
+        raise ValueError(f"top_k must be a positive int, got {top_k!r}")
+    _check_forced_impl(impl, mesh=mesh, chunk=chunk, top_k=top_k)
 
     if _is_ragged(queries):
         if qlens is not None:
             raise ValueError("qlens is implied by ragged (list) queries")
         return _sdtw_ragged(queries, reference, metric=metric, impl=impl,
                             chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
-                            mesh=mesh, ref_axis=ref_axis,
+                            mesh=mesh, ref_axis=ref_axis, top_k=top_k,
+                            return_positions=return_positions,
+                            excl_zone=excl_zone,
                             block_q=block_q, block_m=block_m)
 
     queries = jnp.asarray(queries)
@@ -142,7 +212,7 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     has_excl = excl_lo is not None or excl_hi is not None
     if impl == "auto":
         impl = choose_impl(nq, n, m, mesh=mesh, chunk=chunk,
-                           has_exclusion=has_excl)
+                           has_exclusion=has_excl, top_k=top_k)
     if impl == "pallas" and has_excl:
         raise ValueError("the pallas kernel does not support exclusion "
                          "zones; use impl='rowscan' or 'chunked'")
@@ -150,24 +220,56 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     if impl in ("rowscan", "wavefront"):
         lo = _normalize_excl(excl_lo, nq) if has_excl else None
         hi = _normalize_excl(excl_hi, nq) if has_excl else None
-        out = sdtw_batch(queries, reference, qlens, metric, impl, lo, hi)
+        out = sdtw_batch(queries, reference, qlens, metric, impl, lo, hi,
+                         return_positions)
     elif impl == "pallas":
         from repro.kernels.sdtw import sdtw_pallas
-        out = sdtw_pallas(queries, reference, qlens, metric,
-                          block_q=block_q, block_m=block_m)
+        if chunk is None:
+            out = sdtw_pallas(queries, reference, qlens, metric,
+                              block_q=block_q, block_m=block_m,
+                              return_positions=return_positions)
+        else:
+            out = _pallas_streamed(queries, reference, qlens, metric, chunk,
+                                   block_q, block_m, return_positions)
     elif impl == "chunked":
         out = sdtw_chunked(queries, reference, qlens, metric,
                            chunk or DEFAULT_CHUNK,
                            _normalize_excl(excl_lo, nq),
-                           _normalize_excl(excl_hi, nq))
+                           _normalize_excl(excl_hi, nq),
+                           top_k=top_k, excl_zone=excl_zone,
+                           return_positions=return_positions)
     else:  # sharded
         from repro.distributed.sdtw_sharded import sdtw_sharded
         out = sdtw_sharded(queries, reference, qlens, metric=metric,
                            mesh=mesh, axis=ref_axis,
                            chunk=chunk or DEFAULT_CHUNK,
                            excl_lo=_normalize_excl(excl_lo, nq),
-                           excl_hi=_normalize_excl(excl_hi, nq))
-    return out[0] if single else out
+                           excl_hi=_normalize_excl(excl_hi, nq),
+                           top_k=top_k, excl_zone=excl_zone,
+                           return_positions=return_positions)
+    if single:
+        return (tuple(o[0] for o in out) if isinstance(out, tuple)
+                else out[0])
+    return out
+
+
+def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
+                     block_m, return_positions):
+    """Stream the reference through the Pallas kernel in chunk-sized slices,
+    chaining the kernel's (bcol, best, pos) carry between launches — the
+    explicit meaning of ``impl='pallas'`` + ``chunk=``."""
+    from repro.kernels.sdtw import sdtw_pallas
+    m = reference.shape[0]
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    carry = None
+    for off in range(0, m, chunk):
+        _, carry = sdtw_pallas(queries, reference[off:off + chunk], qlens,
+                               metric, block_q=block_q, block_m=block_m,
+                               carry=carry, ref_offset=off,
+                               return_carry=True)
+    _, best, pos = carry
+    return (best, pos) if return_positions else best
 
 
 def bucketize(lengths: Sequence[int]):
@@ -183,31 +285,56 @@ def bucketize(lengths: Sequence[int]):
     return dict(sorted(buckets.items()))
 
 
+def pad_ragged_bucket(qs, idxs, blen: int):
+    """Materialise one ragged bucket: zero-pad the selected queries to
+    (len(idxs), blen) in their promoted dtype.
+
+    Shared by the engine's ragged dispatch and ``repro.search`` so the
+    pad/bucket conventions cannot drift. Returns numpy
+    ``(padded, qlens)``.
+    """
+    dtype = np.result_type(*[qs[i].dtype for i in idxs])
+    padded = np.zeros((len(idxs), blen), dtype)
+    qlens = np.empty((len(idxs),), np.int32)
+    for k, i in enumerate(idxs):
+        padded[k, :len(qs[i])] = qs[i]
+        qlens[k] = len(qs[i])
+    return padded, qlens
+
+
 def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
-                 excl_hi, mesh, ref_axis, block_q, block_m):
+                 excl_hi, mesh, ref_axis, top_k, return_positions,
+                 excl_zone, block_q, block_m):
     """Bucketed dispatch for mixed-length query sets."""
     qs = [np.asarray(q) for q in queries]
     nq = len(qs)
+    wants_pair = top_k is not None or return_positions
     if nq == 0:
+        if wants_pair:
+            kk = 1 if top_k is None else top_k
+            shape = (0,) if top_k is None else (0, kk)
+            return jnp.zeros(shape, jnp.int32), jnp.zeros(shape, jnp.int32)
         return jnp.zeros((0,), jnp.int32)
     lo = np.asarray(_normalize_excl(excl_lo, nq))
     hi = np.asarray(_normalize_excl(excl_hi, nq))
     buckets = bucketize([len(q) for q in qs])
 
     out = [None] * nq
+    pos = [None] * nq
     for blen, idxs in buckets.items():
-        dtype = np.result_type(*[qs[i].dtype for i in idxs])
-        padded = np.zeros((len(idxs), blen), dtype)
-        qlens = np.empty((len(idxs),), np.int32)
-        for k, i in enumerate(idxs):
-            padded[k, :len(qs[i])] = qs[i]
-            qlens[k] = len(qs[i])
-        dists = sdtw(jnp.asarray(padded), reference, jnp.asarray(qlens),
-                     metric=metric, impl=impl, chunk=chunk,
-                     excl_lo=jnp.asarray(lo[idxs]),
-                     excl_hi=jnp.asarray(hi[idxs]),
-                     mesh=mesh, ref_axis=ref_axis,
-                     block_q=block_q, block_m=block_m)
+        padded, qlens = pad_ragged_bucket(qs, idxs, blen)
+        res = sdtw(jnp.asarray(padded), reference, jnp.asarray(qlens),
+                   metric=metric, impl=impl, chunk=chunk,
+                   excl_lo=jnp.asarray(lo[idxs]),
+                   excl_hi=jnp.asarray(hi[idxs]),
+                   mesh=mesh, ref_axis=ref_axis, top_k=top_k,
+                   return_positions=return_positions, excl_zone=excl_zone,
+                   block_q=block_q, block_m=block_m)
+        dists, posns = res if wants_pair else (res, None)
         for k, i in enumerate(idxs):
             out[i] = dists[k]
+            if posns is not None:
+                pos[i] = posns[k]
+    if wants_pair:
+        return jnp.stack(out), jnp.stack(pos)
     return jnp.stack(out)

@@ -32,12 +32,14 @@ positions is given +inf distance, which removes trivial self-matches.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from .distances import accum_dtype, big, pointwise_distance, sat_add
+from .topk import topk_init, topk_merge
 
 
 def _tropical_combine(left, right):
@@ -58,9 +60,9 @@ def _masked_distance(qi, ref, metric, excl_lo, excl_hi, BIG):
 # Row-scan (associative scan over the tropical semiring) — beyond-paper.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric",))
+@functools.partial(jax.jit, static_argnames=("metric", "return_position"))
 def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
-                 excl_lo=None, excl_hi=None):
+                 excl_lo=None, excl_hi=None, return_position: bool = False):
     """sDTW distance via per-row tropical associative scan.
 
     Args:
@@ -70,8 +72,11 @@ def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
                  ignored — the answer is min over row ``qlen - 1``.
       metric:    'abs_diff' | 'square_diff'.
       excl_lo/excl_hi: optional banned reference column range (self-join).
+      return_position: also return the match end position — the leftmost
+                 reference index attaining the minimum of row ``qlen - 1``.
 
-    Returns: scalar sDTW distance in the accumulator dtype.
+    Returns: scalar sDTW distance in the accumulator dtype (or a
+    ``(distance, end_position)`` pair with ``return_position=True``).
     """
     acc = accum_dtype(jnp.result_type(query, reference))
     BIG = big(acc)
@@ -83,9 +88,11 @@ def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
     d0 = _masked_distance(query[0], reference, metric, excl_lo, excl_hi, BIG)
     prev = d0                                           # row 0: free start
     best0 = jnp.where(qlen == 1, jnp.min(d0), BIG)
+    pos0 = jnp.where(qlen == 1, jnp.argmin(d0).astype(jnp.int32),
+                     jnp.int32(-1))
 
     def row_step(carry, qi):
-        prev, best, i = carry
+        prev, best, pos, i = carry
         d = _masked_distance(qi, reference, metric, excl_lo, excl_hi, BIG)
         prev_shift = jnp.concatenate([jnp.full((1,), BIG, acc), prev[:-1]])
         m = jnp.minimum(prev_shift, prev)               # min(S[i-1,j-1], S[i-1,j])
@@ -93,11 +100,16 @@ def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
         u = sat_add(d, m).at[0].set(s0)
         a = d.at[0].set(BIG)
         _, s = lax.associative_scan(_tropical_combine, (a, u))
-        best = jnp.where(i == qlen - 1, jnp.minimum(best, jnp.min(s)), best)
+        hit = i == qlen - 1
+        best = jnp.where(hit, jnp.minimum(best, jnp.min(s)), best)
+        pos = jnp.where(hit, jnp.argmin(s).astype(jnp.int32), pos)
         # Freeze rows past the true query end so `prev` stays meaningless-safe.
-        return (s, best, i + 1), None
+        return (s, best, pos, i + 1), None
 
-    (_, best, _), _ = lax.scan(row_step, (prev, best0, jnp.int32(1)), query[1:])
+    (_, best, pos, _), _ = lax.scan(
+        row_step, (prev, best0, pos0, jnp.int32(1)), query[1:])
+    if return_position:
+        return best, pos
     return best
 
 
@@ -105,15 +117,19 @@ def sdtw_rowscan(query, reference, qlen=None, metric: str = "abs_diff",
 # Anti-diagonal wavefront — paper-faithful (MATSA §III-E execution flow).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric",))
+@functools.partial(jax.jit, static_argnames=("metric", "return_position"))
 def sdtw_wavefront(query, reference, qlen=None, metric: str = "abs_diff",
-                   excl_lo=None, excl_hi=None):
+                   excl_lo=None, excl_hi=None, return_position: bool = False):
     """sDTW distance via anti-diagonal wavefront scan (MATSA's schedule).
 
     Diagonal k holds cells (i, j) with i + j = k, indexed by i. The carry is
     the last two diagonals (the paper's temporal S_vectors); each step
     consumes one new reference "column" — the direct analogue of MATSA's
-    diagonal row copies between crossbar columns.
+    diagonal row copies between crossbar columns. With
+    ``return_position=True`` the leftmost end index of the best match is
+    tracked alongside (diagonal k touches row qlen-1 at exactly one column,
+    ``k - qlen + 1``, and k ascends — a strict improvement test keeps the
+    earliest column, matching ``sdtw_rowscan``'s leftmost ``argmin``).
     """
     acc = accum_dtype(jnp.result_type(query, reference))
     BIG = big(acc)
@@ -130,7 +146,7 @@ def sdtw_wavefront(query, reference, qlen=None, metric: str = "abs_diff",
     i_idx = jnp.arange(n)
 
     def step(carry, k):
-        dm1, dm2, best = carry
+        dm1, dm2, best, pos = carry
         j_idx = k - i_idx                               # ref position per cell
         valid = (j_idx >= 0) & (j_idx < m) & (i_idx < qlen)
         r_rev = lax.dynamic_slice(r_pad, (k,), (n,))[::-1]
@@ -143,11 +159,16 @@ def sdtw_wavefront(query, reference, qlen=None, metric: str = "abs_diff",
         cur = jnp.where(i_idx == 0, d, sat_add(d, mins))
         cur = jnp.where(valid, cur, BIG)
         last = jnp.where((i_idx == qlen - 1) & valid, cur, BIG)
-        best = jnp.minimum(best, jnp.min(last))
-        return (cur, dm1, best), None
+        lmin = jnp.min(last)
+        pos = jnp.where(lmin < best, (k - qlen + 1).astype(jnp.int32), pos)
+        best = jnp.minimum(best, lmin)
+        return (cur, dm1, best, pos), None
 
-    init = (jnp.full((n,), BIG, acc), jnp.full((n,), BIG, acc), BIG)
-    (_, _, best), _ = lax.scan(step, init, jnp.arange(n + m - 1))
+    init = (jnp.full((n,), BIG, acc), jnp.full((n,), BIG, acc), BIG,
+            jnp.int32(-1))
+    (_, _, best, pos), _ = lax.scan(step, init, jnp.arange(n + m - 1))
+    if return_position:
+        return best, pos
     return best
 
 
@@ -173,16 +194,22 @@ def sdtw_carry_init(nq: int, n: int, acc):
 
 def _chunk_masked_distance(qi, ref_chunk, metric, j0, m_total, excl_lo,
                            excl_hi, BIG):
-    """Distance row for one chunk, masking by *global* reference position."""
+    """Distance row for one chunk, masking by *global* reference position.
+
+    Columns outside [0, m_total) are banned — a negative ``j0`` lets the
+    pruned-search halo pad a chunk group past the left edge of the
+    reference without perturbing the DP (the pad columns behave exactly
+    like the implicit BIG columns before the reference starts)."""
     d = pointwise_distance(qi, ref_chunk, metric)
     j = j0 + jnp.arange(ref_chunk.shape[0])
-    banned = ((j >= excl_lo) & (j < excl_hi)) | (j >= m_total)
+    banned = ((j >= excl_lo) & (j < excl_hi)) | (j >= m_total) | (j < 0)
     return jnp.where(banned, BIG, d)
 
 
 def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
                        m_total=None, metric: str = "abs_diff",
-                       excl_lo=None, excl_hi=None):
+                       excl_lo=None, excl_hi=None,
+                       return_lastrow: bool = False):
     """One reference chunk of the row-scan, entered/exited via the carry.
 
     Args:
@@ -192,8 +219,12 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
       best:      scalar running best (min over row qlen-1 of prior chunks).
       qlen:      true query length; j0: global column offset of the chunk;
       m_total:   true reference length (columns >= m_total are masked).
+      return_lastrow: also return row ``qlen - 1`` of the chunk — the match
+                 score of every alignment *ending* at each of the chunk's
+                 columns, which is what top-K extraction consumes.
 
-    Returns (new_bcol, new_best) with new_bcol = S[:, j0 + C - 1].
+    Returns (new_bcol, new_best) with new_bcol = S[:, j0 + C - 1], plus the
+    (C,) last row when ``return_lastrow``.
     """
     acc = accum_dtype(jnp.result_type(query, ref_chunk))
     BIG = big(acc)
@@ -211,8 +242,13 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
     s0 = dist(query[0], ref_chunk)                  # row 0: free start
     best = jnp.where(qlen == 1, jnp.minimum(best, jnp.min(s0)), best)
 
+    # The (C,) last-row buffer rides the carry only when asked for —
+    # the plain streaming hot path stays untaxed.
     def row_step(carry, xs):
-        prev, best, i = carry
+        if return_lastrow:
+            prev, best, lrow, i = carry
+        else:
+            prev, best, i = carry
         qi, b_left, b_diag = xs          # S[i, j0-1], S[i-1, j0-1]
         d = dist(qi, ref_chunk)
         prev_sh = jnp.concatenate([b_diag[None], prev[:-1]])
@@ -220,12 +256,23 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
         a, u = d, sat_add(d, mn)
         a_p, u_p = lax.associative_scan(_tropical_combine, (a, u))
         s = jnp.minimum(u_p, sat_add(a_p, b_left))  # fold in S[i, j0-1]
-        best = jnp.where(i == qlen - 1, jnp.minimum(best, jnp.min(s)), best)
+        hit = i == qlen - 1
+        best = jnp.where(hit, jnp.minimum(best, jnp.min(s)), best)
+        if return_lastrow:
+            lrow = jnp.where(hit, s, lrow)
+            return (s, best, lrow, i + 1), s[-1]
         return (s, best, i + 1), s[-1]
 
-    (_, best, _), tail = lax.scan(row_step, (s0, best, jnp.int32(1)),
-                                  (query[1:], bcol[1:], bcol[:-1]))
+    xs = (query[1:], bcol[1:], bcol[:-1])
+    if return_lastrow:
+        lrow0 = jnp.where(qlen == 1, s0, jnp.full_like(s0, BIG))
+        (_, best, lrow, _), tail = lax.scan(
+            row_step, (s0, best, lrow0, jnp.int32(1)), xs)
+    else:
+        (_, best, _), tail = lax.scan(row_step, (s0, best, jnp.int32(1)), xs)
     new_bcol = jnp.concatenate([s0[-1:], tail])
+    if return_lastrow:
+        return new_bcol, best, lrow
     return new_bcol, best
 
 
@@ -237,6 +284,58 @@ def sdtw_chunk_batch(queries, ref_chunk, qlens, carry, j0, m_total,
         lambda q, ql, bc, be, lo, hi: sdtw_rowscan_chunk(
             q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi)
     )(queries, qlens, bcol, best, excl_lo, excl_hi)
+
+
+def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
+                          metric: str, excl_lo, excl_hi, k: int,
+                          excl_zone):
+    """Advance the *top-K* carry (bcol, best, top_d, top_p) by one chunk.
+
+    On top of the boundary-column hand-off, the carry holds a per-query
+    match heap (top_d (nq, k), top_p (nq, k)): the chunk's last DP row —
+    the score of every alignment ending at each chunk column — is folded
+    into the heap with exclusion-zone suppression (``repro.core.topk``;
+    ``excl_zone`` is a per-query (nq,) radius, so a ragged bucket keeps
+    each query's own zone). End positions are global (``j0`` offsets the
+    chunk), so the same code serves the in-process streamer and the
+    sharded systolic pipeline.
+    """
+    bcol, best, top_d, top_p = carry
+    pos = j0 + jnp.arange(ref_chunk.shape[0], dtype=jnp.int32)
+
+    def one(q, ql, bc, be, lo, hi, hd, hp, ez):
+        nbc, nbe, lrow = sdtw_rowscan_chunk(
+            q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi,
+            return_lastrow=True)
+        nd, np_ = topk_merge(hd, hp, lrow, pos, k, ez)
+        return nbc, nbe, nd, np_
+
+    return jax.vmap(one)(queries, qlens, bcol, best, excl_lo, excl_hi,
+                         top_d, top_p, excl_zone)
+
+
+def default_excl_zone(qlens):
+    """The documented default suppression radius: half the *true* query
+    length, per query (not the padded bucket width — ragged dispatch must
+    match the equivalent per-query call)."""
+    return jnp.maximum(1, jnp.asarray(qlens, jnp.int32) // 2)
+
+
+def sdtw_segment_topk(queries, segment, qlens, carry, j0, m_total,
+                      metric: str, chunk: int, excl_lo, excl_hi, k: int,
+                      excl_zone):
+    """``sdtw_segment`` with the top-K heap riding the chunk carry."""
+    n_tiles = segment.shape[0] // chunk
+    tiles = segment.reshape(n_tiles, chunk)
+
+    def step(c, xs):
+        tile, t = xs
+        return sdtw_chunk_batch_topk(queries, tile, qlens, c,
+                                     j0 + t * chunk, m_total, metric,
+                                     excl_lo, excl_hi, k, excl_zone), None
+
+    carry, _ = lax.scan(step, carry, (tiles, jnp.arange(n_tiles)))
+    return carry
 
 
 def sdtw_segment(queries, segment, qlens, carry, j0, m_total, metric: str,
@@ -260,14 +359,27 @@ def sdtw_segment(queries, segment, qlens, carry, j0, m_total, metric: str,
     return carry
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "chunk"))
+@functools.partial(jax.jit, static_argnames=("metric", "chunk", "top_k",
+                                             "return_positions"))
 def sdtw_chunked(queries, reference, qlens=None, metric: str = "abs_diff",
-                 chunk: int = 4096, excl_lo=None, excl_hi=None):
+                 chunk: int = 4096, excl_lo=None, excl_hi=None,
+                 top_k: Optional[int] = None, excl_zone=None,
+                 return_positions: bool = False):
     """Batched sDTW over an arbitrarily long reference in bounded memory.
 
     The reference is padded to a multiple of ``chunk`` and scanned tile by
     tile under a single jitted shape; only the (nq, N) boundary column is
     carried between tiles. M = millions runs in O(nq·N + chunk) live memory.
+
+    Top-K mode: with ``top_k=k`` the carry additionally holds a per-query
+    (distances, end-positions) heap (see ``repro.core.topk``); the call
+    returns ``(dists (nq, k), positions (nq, k))``, best first, matches at
+    least ``excl_zone + 1`` apart (``excl_zone``: scalar or (nq,); default
+    half of each query's *true* length). With only
+    ``return_positions=True`` the top-1 pair is returned unstacked:
+    ``(dists (nq,), positions (nq,))``. The top-1 distance is bitwise-equal
+    to the plain streaming result; its position is the leftmost end index
+    attaining it.
     """
     nq, n = queries.shape
     m = reference.shape[0]
@@ -280,9 +392,20 @@ def sdtw_chunked(queries, reference, qlens=None, metric: str = "abs_diff",
     n_tiles = -(-m // chunk)
     r_pad = jnp.pad(reference, (0, n_tiles * chunk - m))
     carry = sdtw_carry_init(nq, n, acc)
-    _, best = sdtw_segment(queries, r_pad, qlens, carry, 0, m, metric,
-                           chunk, excl_lo, excl_hi)
-    return best
+    if top_k is None and not return_positions:
+        _, best = sdtw_segment(queries, r_pad, qlens, carry, 0, m, metric,
+                               chunk, excl_lo, excl_hi)
+        return best
+    k = 1 if top_k is None else top_k
+    zone = (default_excl_zone(qlens) if excl_zone is None
+            else jnp.broadcast_to(jnp.asarray(excl_zone, jnp.int32), (nq,)))
+    carry = carry + topk_init(nq, k, acc)
+    _, _, top_d, top_p = sdtw_segment_topk(
+        queries, r_pad, qlens, carry, 0, m, metric, chunk, excl_lo,
+        excl_hi, k, zone)
+    if top_k is None:                       # return_positions only: top-1
+        return top_d[:, 0], top_p[:, 0]
+    return top_d, top_p
 
 
 # ---------------------------------------------------------------------------
@@ -293,11 +416,13 @@ _IMPLS = {"rowscan": sdtw_rowscan, "wavefront": sdtw_wavefront}
 
 
 def sdtw_batch(queries, reference, qlens=None, metric: str = "abs_diff",
-               impl: str = "rowscan", excl_lo=None, excl_hi=None):
+               impl: str = "rowscan", excl_lo=None, excl_hi=None,
+               return_positions: bool = False):
     """Batched sDTW: (nq, N) queries against a shared (M,) reference.
 
     Queries are embarrassingly parallel (paper §II-D) — this is MATSA's
-    reference-replication / query-pipelining axis, mapped to vmap.
+    reference-replication / query-pipelining axis, mapped to vmap. With
+    ``return_positions=True`` returns ``(dists (nq,), end_positions (nq,))``.
     """
     fn = _IMPLS[impl]
     nq, n = queries.shape
@@ -307,7 +432,8 @@ def sdtw_batch(queries, reference, qlens=None, metric: str = "abs_diff",
         excl_lo = jnp.full((nq,), -1, jnp.int32)
         excl_hi = jnp.full((nq,), -1, jnp.int32)
     return jax.vmap(
-        lambda qu, ql, lo, hi: fn(qu, reference, ql, metric, lo, hi)
+        lambda qu, ql, lo, hi: fn(qu, reference, ql, metric, lo, hi,
+                                  return_positions)
     )(queries, qlens, excl_lo, excl_hi)
 
 

@@ -1,0 +1,78 @@
+"""Fixed-size top-K match heaps with exclusion-zone suppression.
+
+The search layer (``repro.search``) and the streaming sDTW paths report not
+just the best alignment distance but the K best *match end positions* — the
+paper's actual workload (anomaly/motif search over ECG-class streams, §I,
+§V). A "heap" here is a pair of fixed-shape arrays
+
+    (distances (k,), positions (k,))
+
+sorted ascending by distance, padded with ``(BIG, -1)`` — fixed shapes so
+the heap can ride a ``lax.scan`` carry (the chunk boundary-carry protocol)
+and a ``lax.ppermute`` (the sharded systolic pipeline) unchanged.
+
+Selection semantics — greedy best-first with an exclusion zone, the matrix-
+profile convention: repeatedly take the lowest remaining distance, then
+suppress every candidate whose end position is within ``excl_zone`` of it,
+so the K reported matches are non-trivially distinct (no stack of matches
+one sample apart). Ties break toward the lowest end position (``argmin`` is
+leftmost, and streamed chunks merge in reference order). Saturated
+candidates (distance ≥ BIG, e.g. the int32 ceiling) are never reported —
+they come back as ``(BIG, -1)`` padding.
+
+The streamed top-1 is exact: it is the global ``min`` with the leftmost end
+index, bitwise-equal to ``engine.sdtw()``. For K > 1 the greedy suppression
+is order-dependent in the usual way (a candidate suppressed by a better
+neighbour cannot "come back" if that neighbour is later suppressed
+itself); every reported match is still a genuine alignment distance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .distances import big
+
+
+def topk_init(nq: int, k: int, acc):
+    """Empty batched heap: ((nq, k) BIG distances, (nq, k) -1 positions)."""
+    return (jnp.full((nq, k), big(acc), acc),
+            jnp.full((nq, k), -1, jnp.int32))
+
+
+def topk_select(scores, positions, k: int, excl_zone: int):
+    """K rounds of select-then-suppress over one candidate row.
+
+    Args:
+      scores:    (C,) candidate distances (BIG = absent/banned/saturated).
+      positions: (C,) global end positions of the candidates.
+      k:         static heap size.
+      excl_zone: suppression radius — after a pick at position p, every
+                 candidate with |position - p| <= excl_zone is removed.
+
+    Returns (k,) distances ascending + (k,) positions, (BIG, -1)-padded.
+    """
+    acc = scores.dtype
+    BIG = big(acc)
+    out_d, out_p = [], []
+    for _ in range(k):
+        idx = jnp.argmin(scores)                    # leftmost on ties
+        d = scores[idx]
+        live = d < BIG
+        p = jnp.where(live, positions[idx], -1)
+        suppress = live & (jnp.abs(positions - p) <= excl_zone)
+        scores = jnp.where(suppress, BIG, scores)
+        out_d.append(jnp.where(live, d, BIG))
+        out_p.append(p)
+    return jnp.stack(out_d), jnp.stack(out_p)
+
+
+def topk_merge(heap_d, heap_p, scores, positions, k: int, excl_zone: int):
+    """Fold a fresh candidate row into a (k,) heap (one query).
+
+    The heap's entries come first in the concatenation, so on exact ties
+    the earlier (lower-position, earlier-chunk) match wins — this is what
+    keeps the streamed top-1 bitwise-equal to the one-shot ``argmin``.
+    """
+    d = jnp.concatenate([heap_d, scores.astype(heap_d.dtype)])
+    p = jnp.concatenate([heap_p, positions.astype(jnp.int32)])
+    return topk_select(d, p, k, excl_zone)

@@ -23,12 +23,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.distances import accum_dtype
-from repro.core.sdtw import sdtw_carry_init, sdtw_segment
+from repro.core.sdtw import (default_excl_zone, sdtw_carry_init,
+                             sdtw_segment, sdtw_segment_topk)
+from repro.core.topk import topk_init
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -37,14 +40,22 @@ def _ceil_to(x: int, m: int) -> int:
 
 def default_mesh(axis: str = "ref") -> Mesh:
     """1-D mesh over every local device, reference axis sharded."""
-    import numpy as np
     return Mesh(np.asarray(jax.devices()), (axis,))
 
 
 @functools.lru_cache(maxsize=None)
 def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
-           n_micro: int):
-    """Jitted shard-mapped pipeline for one (mesh, schedule) configuration."""
+           n_micro: int, top_k, excl_zone):
+    """Jitted shard-mapped pipeline for one (mesh, schedule) configuration.
+
+    With ``top_k`` set, the per-microbatch match heap (top-K distances and
+    global end positions, see ``repro.core.topk``) rides the systolic carry
+    exactly like the boundary column: each device folds the candidates of
+    its own reference segment into the heap it received from the left
+    neighbour, so the heap exiting the last device is already the merged
+    cross-shard top-K — the harvest is the one collective at the end, no
+    extra per-shard gather round.
+    """
     perm = [(i, i + 1) for i in range(ndev - 1)]
     ticks = n_micro + ndev - 1
 
@@ -57,6 +68,8 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
         mb, n = q_micro.shape[1], q_micro.shape[2]
         acc = accum_dtype(jnp.result_type(q_micro, r_shard))
         fresh = sdtw_carry_init(mb, n, acc)
+        if top_k is not None:
+            fresh = fresh + topk_init(mb, top_k, acc)
 
         def tick(carry, t):
             mb_idx = jnp.clip(t - d, 0, n_micro - 1)
@@ -69,16 +82,29 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
             cin = jax.tree.map(
                 lambda f, c: jnp.where(d == 0, f, c.astype(f.dtype)),
                 fresh, carry)
-            cout = sdtw_segment(q, r_shard[0], ql, cin, j0, m_total,
-                                metric, chunk, lo, hi)
+            if top_k is not None:
+                ez = (default_excl_zone(ql) if excl_zone is None
+                      else jnp.full(ql.shape, excl_zone, jnp.int32))
+                cout = sdtw_segment_topk(q, r_shard[0], ql, cin, j0,
+                                         m_total, metric, chunk, lo, hi,
+                                         top_k, ez)
+                emit = (cout[2], cout[3])           # heap: dists, positions
+            else:
+                cout = sdtw_segment(q, r_shard[0], ql, cin, j0, m_total,
+                                    metric, chunk, lo, hi)
+                emit = cout[1]                      # running best
             nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), cout)
-            return nxt, cout[1]                     # emit running best
+            return nxt, emit
 
-        _, outs = lax.scan(tick, fresh, jnp.arange(ticks))  # (ticks, mb)
-        # The last device finishes microbatch μ at tick μ + ndev - 1.
-        res = lax.dynamic_slice_in_dim(outs, ndev - 1, n_micro, 0)
-        res = jnp.where(d == ndev - 1, res, jnp.zeros_like(res))
-        return lax.psum(res, axis)
+        _, outs = lax.scan(tick, fresh, jnp.arange(ticks))  # (ticks, mb, ...)
+        # The last device finishes microbatch μ at tick μ + ndev - 1; only
+        # its in-window ticks carry fully merged results — zero everywhere
+        # else and harvest with one psum.
+        def harvest(o):
+            o = lax.dynamic_slice_in_dim(o, ndev - 1, n_micro, 0)
+            o = jnp.where(d == ndev - 1, o, jnp.zeros_like(o))
+            return lax.psum(o, axis)
+        return jax.tree.map(harvest, outs)
 
     mapped = shard_map(
         body, mesh=mesh,
@@ -91,11 +117,20 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
 def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  mesh: Optional[Mesh] = None, axis: str = "ref",
                  chunk: int = 8192, n_micro: Optional[int] = None,
-                 excl_lo=None, excl_hi=None):
+                 excl_lo=None, excl_hi=None,
+                 top_k: Optional[int] = None,
+                 excl_zone: Optional[int] = None,
+                 return_positions: bool = False):
     """Batched sDTW with the reference sharded across ``mesh[axis]``.
 
     queries (nq, N), reference (M,) → (nq,) distances, matching the
     single-device engine bit-for-bit for int32 inputs.
+
+    ``top_k=k`` returns ``(dists (nq, k), positions (nq, k))`` — the match
+    heap travels with the microbatch through the device pipeline (the same
+    ppermute that hands over the boundary column), so the cross-shard merge
+    costs no extra collective; positions are global reference indices.
+    ``return_positions=True`` alone returns the top-1 pair.
     """
     if mesh is None:
         mesh = default_mesh(axis)
@@ -127,9 +162,31 @@ def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
     lo_pad = jnp.pad(excl_lo, (0, pad_q), constant_values=-1)
     hi_pad = jnp.pad(excl_hi, (0, pad_q), constant_values=-1)
 
-    run = _build(mesh, axis, metric, chunk, ndev, n_micro)
+    wants_pair = top_k is not None or return_positions
+    kk = (1 if top_k is None else top_k) if wants_pair else None
+    if excl_zone is not None and np.ndim(excl_zone) != 0:
+        # The zone is baked into the cached pipeline build; per-query
+        # arrays (which sdtw_chunked accepts) would need to ride the
+        # traced inputs — reject loudly rather than crash in int().
+        raise ValueError("sdtw_sharded takes a scalar excl_zone (or None "
+                         "for the per-query default); per-query zone "
+                         "arrays are only supported on the single-device "
+                         "chunked path")
+    # zone is unused by the plain pipeline — pin it so non-top-K calls
+    # share one _build cache entry. None = derive per query in the body
+    # (half the true query length, matching the single-device default).
+    zone = 0 if kk is None else (
+        None if excl_zone is None else int(excl_zone))
+    run = _build(mesh, axis, metric, chunk, ndev, n_micro, kk, zone)
     outs = run(r_pad, q_pad.reshape(n_micro, mb, n),
                ql_pad.reshape(n_micro, mb),
                lo_pad.reshape(n_micro, mb), hi_pad.reshape(n_micro, mb),
                jnp.int32(m))
-    return outs.reshape(n_micro * mb)[:nq]
+    if not wants_pair:
+        return outs.reshape(n_micro * mb)[:nq]
+    dists, poss = outs
+    dists = dists.reshape(n_micro * mb, kk)[:nq]
+    poss = poss.reshape(n_micro * mb, kk)[:nq]
+    if top_k is None:                       # return_positions only: top-1
+        return dists[:, 0], poss[:, 0]
+    return dists, poss

@@ -31,13 +31,15 @@ def _ceil_to(x: int, m: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("metric", "block_q", "block_m", "interpret",
-                     "return_carry"))
+                     "return_carry", "return_positions"))
 def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 block_q: int = DEFAULT_BLOCK_Q,
                 block_m: int = DEFAULT_BLOCK_M,
                 interpret: bool | None = None,
                 carry=None,
-                return_carry: bool = False):
+                return_carry: bool = False,
+                ref_offset=0,
+                return_positions: bool = False):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
     VMEM working set per grid cell ≈ block_q·(2·block_m + 3·N) accumulator
@@ -45,11 +47,20 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     be chosen so this fits (~16 MB VMEM on v5e); the defaults handle
     N ≤ 48K comfortably.
 
-    Chunk-carry protocol: ``carry`` is an optional (bcol (B, N), best (B,))
-    pair — the DP boundary column S[:, -1] of the reference slice processed
-    so far plus the running per-query best. Passing the carry returned by a
-    previous call (``return_carry=True``) continues the recurrence as if the
-    two reference slices had been one array.
+    Chunk-carry protocol: ``carry`` is an optional
+    ``(bcol (B, N), best (B,), pos (B,))`` triple — the DP boundary column
+    S[:, -1] of the reference slice processed so far, the running per-query
+    best, and the global end position of that best (the kernel tracks the
+    match end position in the carry so streamed slices report positions
+    exactly; a legacy ``(bcol, best)`` pair is accepted and seeds positions
+    at -1). Passing the carry returned by a previous call
+    (``return_carry=True``) continues the recurrence as if the two
+    reference slices had been one array. ``ref_offset`` is the global
+    column index of ``reference[0]`` (traced; no recompile per slice) so
+    reported positions are global.
+
+    With ``return_positions=True`` the primary result is a
+    ``(dists (B,), end_positions (B,))`` pair instead of ``dists``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -63,10 +74,16 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     if carry is None:
         bcol = jnp.full((b, n), BIG, acc)
         best = jnp.full((b,), BIG, acc)
+        pos = jnp.full((b,), -1, jnp.int32)
     else:
-        bcol, best = carry
+        if len(carry) == 2:                 # legacy (bcol, best) pair
+            bcol, best = carry
+            pos = jnp.full((b,), -1, jnp.int32)
+        else:
+            bcol, best, pos = carry
         bcol = bcol.astype(acc)
         best = best.astype(acc)
+        pos = pos.astype(jnp.int32)
     bp = _ceil_to(b, block_q)
     mp = _ceil_to(max(m, block_m), block_m)
 
@@ -74,13 +91,15 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     r_pad = jnp.zeros((1, mp), reference.dtype).at[0, :m].set(reference)
     qlen_pad = jnp.ones((bp, 1), jnp.int32).at[:b, 0].set(qlens)
     rlen = jnp.full((1, 1), m, jnp.int32)
+    off = jnp.full((1, 1), ref_offset, jnp.int32)
     bcol_pad = jnp.full((bp, n), BIG, acc).at[:b].set(bcol)
     best_pad = jnp.full((bp, 1), BIG, acc).at[:b, 0].set(best)
+    pos_pad = jnp.full((bp, 1), -1, jnp.int32).at[:b, 0].set(pos)
 
     grid = (bp // block_q, mp // block_m)
     kernel = functools.partial(_sdtw_kernel, metric, n, block_m)
 
-    out, bound = pl.pallas_call(
+    out, bound, pos_out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -88,20 +107,26 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
             pl.BlockSpec((1, block_m), lambda qb, t: (0, t)),
             pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
             pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
             pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
             pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
             pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
+            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bp, 1), acc),
             jax.ShapeDtypeStruct((bp, n), acc),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(q_pad, r_pad, qlen_pad, rlen, bcol_pad, best_pad)
+    )(q_pad, r_pad, qlen_pad, rlen, off, bcol_pad, best_pad, pos_pad)
     dist = out[:b, 0]
+    end_pos = pos_out[:b, 0]
+    res = (dist, end_pos) if return_positions else dist
     if return_carry:
-        return dist, (bound[:b], dist)
-    return dist
+        return res, (bound[:b], dist, end_pos)
+    return res

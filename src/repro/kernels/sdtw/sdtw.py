@@ -28,9 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.distances import accum_dtype, big, sat_add
+from repro.core.distances import big, sat_add
 
 NEG_SHIFT_FILL_A = 0  # identity element of the tropical composition: f(x) = x
 
@@ -61,30 +59,43 @@ def _tropical_row_scan(a, u, big_val):
 
 
 def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
-                 bcol_in_ref, best_in_ref, out_ref, bound_ref):
+                 off_ref, bcol_in_ref, best_in_ref, pos_in_ref, out_ref,
+                 bound_ref, pos_ref):
     """One (query_block, ref_tile) cell of the grid.
 
     q_ref:      (block_q, N)   queries (VMEM)
     r_ref:      (1, block_m)   reference tile (VMEM)
     qlen_ref:   (block_q, 1)   true query lengths
     rlen_ref:   (1, 1)         true reference length
+    off_ref:    (1, 1)         global column offset of this reference slice
+                               (chunk-carry streaming) — reported match end
+                               positions are ``off + local column``
     bcol_in_ref:(block_q, N)   carry in: boundary column entering this call
                                (BIG for a fresh start)
     best_in_ref:(block_q, 1)   carry in: running per-query best
+    pos_in_ref: (block_q, 1)   carry in: end position of that best (-1 for
+                               a fresh start)
     out_ref:    (block_q, 1)   running per-query best (min over last valid row)
     bound_ref:  (block_q, N)   output: boundary column — seeded from the
                                previous *reference slice* (chunk-carry
                                protocol), threaded between tiles, and
                                returned as the carry for the next slice
+    pos_ref:    (block_q, 1)   output: global end position of the best match
+                               (leftmost column attaining it); updated only
+                               on strict improvement so earlier slices/tiles
+                               win ties, matching the rowscan's leftmost
+                               ``argmin``
     """
     t = pl.program_id(1)
     acc = out_ref.dtype
     BIG = big(acc)
     bq = q_ref.shape[0]
+    INT_FAR = jnp.iinfo(jnp.int32).max
 
     r = r_ref[...].astype(acc)                       # (1, bm)
     qlen = qlen_ref[...].astype(jnp.int32)           # (bq, 1)
     rlen = rlen_ref[0, 0]
+    off = off_ref[0, 0]
     j_global = t * block_m + lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
     col_ok = j_global < rlen                         # (1, bm)
 
@@ -92,11 +103,13 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
     def _init():
         out_ref[...] = best_in_ref[...]
         bound_ref[...] = bcol_in_ref[...]
+        pos_ref[...] = pos_in_ref[...]
 
     best0 = out_ref[...]                             # (bq, 1)
+    pos0 = pos_ref[...]                              # (bq, 1)
 
     def row_body(i, carry):
-        prev, b_im1, best = carry                    # (bq,bm), (bq,1), (bq,1)
+        prev, b_im1, best, pos = carry               # (bq,bm), (bq,1) ×3
         qi = jax.lax.dynamic_slice_in_dim(q_ref[...], i, 1, axis=1).astype(acc)
         d = _distance(qi, r, metric)                 # (bq, bm) broadcast
         d = jnp.where(col_ok, d, BIG)
@@ -118,9 +131,17 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         s = jnp.where(i == 0, d, s_rec)              # free-start row
         s = jnp.where(col_ok, s, BIG)
 
-        # Record min over the last valid row of each query.
+        # Record min over the last valid row of each query, plus the
+        # leftmost global column attaining it (strict < so earlier
+        # tiles/slices keep ties).
         row_min = jnp.min(s, axis=1, keepdims=True)
-        best = jnp.where(i == qlen - 1, jnp.minimum(best, row_min), best)
+        at_last = i == qlen - 1
+        cand = jnp.min(jnp.where(s == row_min,
+                                 jnp.broadcast_to(off + j_global, s.shape),
+                                 INT_FAR), axis=1, keepdims=True)
+        pos = jnp.where(at_last & (row_min < best), cand.astype(jnp.int32),
+                        pos)
+        best = jnp.where(at_last, jnp.minimum(best, row_min), best)
 
         # Persist this tile's last *valid* column as the next boundary (the
         # returned carry must be S[:, rlen-1], not a BIG padding lane, for
@@ -132,9 +153,10 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         bound_new = jax.lax.dynamic_update_slice_in_dim(
             bound_ref[...], new_b, i, axis=1)
         bound_ref[...] = bound_new
-        return s, b_row, best
+        return s, b_row, best, pos
 
     prev0 = jnp.full((bq, block_m), BIG, acc)
     b0 = jnp.full((bq, 1), BIG, acc)
-    _, _, best = lax.fori_loop(0, n, row_body, (prev0, b0, best0))
+    _, _, best, pos = lax.fori_loop(0, n, row_body, (prev0, b0, best0, pos0))
     out_ref[...] = best
+    pos_ref[...] = pos

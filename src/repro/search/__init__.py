@@ -1,0 +1,18 @@
+"""Top-K pruned subsequence search on the unified sDTW engine.
+
+``search_topk`` is the query-answering layer: lower-bound pruning
+(LB_Kim / LB_Keogh over a cached per-chunk envelope) in front of the
+engine's chunk-carry DP, returning the K best, exclusion-zone-distinct
+match end positions per query.
+"""
+from .cache import DEFAULT_CACHE, EnvelopeCache
+from .lower_bounds import (chunk_envelope, lb_cascade, windowed_envelope,
+                           znorm, znorm_padded)
+from .search import SearchResult, default_chunk, search_topk
+
+__all__ = [
+    "search_topk", "SearchResult", "default_chunk",
+    "EnvelopeCache", "DEFAULT_CACHE",
+    "chunk_envelope", "windowed_envelope", "lb_cascade",
+    "znorm", "znorm_padded",
+]

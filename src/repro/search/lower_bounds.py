@@ -1,0 +1,167 @@
+"""Lower-bound cascade for pruned subsequence search.
+
+The search front door (``repro.search.search_topk``) decides per reference
+chunk whether the DP can possibly produce a match better than the current
+top-K worst. Two bounds, cheapest first (the TC-DTW / UCR-suite recipe,
+arXiv 2101.07731, adapted to *unconstrained-warping* subsequence DTW):
+
+``lb_kim``   — constant work per (query, chunk): only the first and last
+              query points. The last query point of a match ending at
+              column j must align to r[j] itself, so its distance to the
+              chunk's [min, max] envelope is a bound; the first query
+              point must align somewhere in the match's column window, so
+              its distance to the *windowed* envelope is a bound. Their
+              sum is admissible (distinct DP cells) for queries of length
+              ≥ 2; for length-1 queries only the last-point term applies.
+
+``lb_keogh`` — O(N) work per (query, chunk): every query point must align
+              to some column of the match window, so each contributes its
+              distance to the windowed [min, max] envelope; the last point
+              tightens to the chunk envelope. LB_Keogh dominates LB_Kim
+              (it includes LB_Kim's terms), so the cascade order is purely
+              a cost ladder.
+
+Both bounds assume the match's *warping span* — the number of reference
+columns its alignment path covers — is at most ``span_cap`` columns
+(window = ``halo`` chunks to the left + the chunk itself, with
+``halo * chunk >= span_cap - 1``). Unconstrained sDTW admits paths of
+unbounded span, but a span longer than the query means reference points
+deleted at cost, so real matches concentrate near span ≈ N;
+``search_topk`` defaults to a generous ``span_cap = 2N`` and documents
+the cap as the single approximation of the pruned path. The admissibility
+property (a bound never exceeds the true cost of any span-capped match
+ending in the chunk) is tested against a brute-force windowed-DP oracle
+in ``tests/test_search.py``.
+
+Bounds are computed with vectorized jnp ops — no sequential dependency,
+unlike the DP they gate — in float32, then shaved by ``LB_SAFETY`` to
+absorb float-sum rounding before being compared against DP distances.
+
+Z-normalization: ``znorm`` / ``znorm_padded`` normalize the reference
+(globally) and each query (over its true length) before search when
+``search_topk(normalize=True)`` — the classic trick to make shape, not
+offset/scale, drive the match. Per-window normalization (full UCR suite)
+would need a different DP and is out of scope; global normalization keeps
+the engine's DP and the bounds exact w.r.t. the normalized series.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.distances import METRICS, accum_dtype, big
+
+# Multiplicative shave applied to float32 bound sums so accumulated
+# rounding can never push an admissible bound above the true DP cost.
+LB_SAFETY = 1.0 - 1e-5
+
+
+def znorm(x, eps: float = 1e-8):
+    """Z-normalize a 1-D (or trailing-axis batched) series in float32."""
+    x = jnp.asarray(x, jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    sd = jnp.std(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.maximum(sd, eps)
+
+
+def znorm_padded(queries, qlens, eps: float = 1e-8):
+    """Mask-aware z-norm for a (nq, N) padded batch: moments over the true
+    length only; padded tail stays zero."""
+    q = jnp.asarray(queries, jnp.float32)
+    nq, n = q.shape
+    valid = jnp.arange(n)[None, :] < jnp.asarray(qlens)[:, None]
+    cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+    mu = jnp.sum(jnp.where(valid, q, 0.0), axis=1, keepdims=True) / cnt
+    var = jnp.sum(jnp.where(valid, (q - mu) ** 2, 0.0), axis=1,
+                  keepdims=True) / cnt
+    z = (q - mu) / jnp.maximum(jnp.sqrt(var), eps)
+    return jnp.where(valid, z, 0.0)
+
+
+def chunk_envelope(reference, chunk: int):
+    """Per-chunk [min, max] of the reference — the envelope the bounds eat.
+
+    Returns (mins (T,), maxs (T,)) in the accumulator dtype, T = ceil(M /
+    chunk); tail padding is ignored via ±BIG fill. This is the per-
+    reference precomputation ``repro.search.cache.EnvelopeCache`` stores.
+    """
+    reference = jnp.asarray(reference)
+    m = reference.shape[0]
+    acc = accum_dtype(reference.dtype)
+    BIG = big(acc)
+    t = -(-m // chunk)
+    r = jnp.pad(reference.astype(acc), (0, t * chunk - m))
+    mask = (jnp.arange(t * chunk) < m).reshape(t, chunk)
+    r = r.reshape(t, chunk)
+    mins = jnp.min(jnp.where(mask, r, BIG), axis=1)
+    maxs = jnp.max(jnp.where(mask, r, -BIG), axis=1)
+    return mins, maxs
+
+
+def windowed_envelope(mins, maxs, halo: int):
+    """Envelope over chunks [t - halo, t] for each t (the match window).
+
+    Out-of-range chunks contribute nothing (±BIG fill), so early chunks
+    get the correctly narrower window.
+    """
+    acc = mins.dtype
+    BIG = big(acc)
+    t = mins.shape[0]
+    wmin, wmax = mins, maxs
+    for s in range(1, halo + 1):
+        pad = min(s, t)
+        sh_min = jnp.concatenate([jnp.full((pad,), BIG, acc), mins])[:t]
+        sh_max = jnp.concatenate([jnp.full((pad,), -BIG, acc), maxs])[:t]
+        wmin = jnp.minimum(wmin, sh_min)
+        wmax = jnp.maximum(wmax, sh_max)
+    return wmin, wmax
+
+
+def _interval_dist(q, lo, hi, metric: str):
+    """Pointwise distance from value(s) q to the interval [lo, hi] — the
+    smallest possible metric distance to any point inside it."""
+    gap = jnp.maximum(jnp.maximum(lo - q, q - hi), 0.0)
+    if metric == "square_diff":
+        return gap * gap
+    return gap
+
+
+def lb_cascade(queries, qlens, mins, maxs, halo: int,
+               metric: str = "abs_diff"):
+    """LB_Kim and LB_Keogh for every (query, chunk) pair.
+
+    Args:
+      queries: (nq, N) padded batch; qlens (nq,) true lengths.
+      mins/maxs: (T,) per-chunk envelope from ``chunk_envelope``.
+      halo:    window radius in chunks (ceil(span_cap / chunk)).
+      metric:  'abs_diff' | 'square_diff'.
+
+    Returns (lb_kim (nq, T), lb_keogh (nq, T)) in float32, shaved by
+    ``LB_SAFETY``; ``lb_keogh >= lb_kim`` elementwise by construction.
+    Memory: the Keogh term materialises an (nq, N, T) intermediate — fine
+    for serving-sized batches; shard the chunk axis upstream if T is huge.
+    """
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; expected {METRICS}")
+    q = jnp.asarray(queries, jnp.float32)
+    nq, n = q.shape
+    qlens = jnp.asarray(qlens, jnp.int32)
+    cmin = jnp.asarray(mins, jnp.float32)[None, :]       # chunk envelope
+    cmax = jnp.asarray(maxs, jnp.float32)[None, :]
+    wmin, wmax = windowed_envelope(jnp.asarray(mins, jnp.float32),
+                                   jnp.asarray(maxs, jnp.float32), halo)
+    wmin, wmax = wmin[None, :], wmax[None, :]            # match window
+
+    q_last = jnp.take_along_axis(q, (qlens - 1)[:, None], axis=1)  # (nq, 1)
+    last_term = _interval_dist(q_last, cmin, cmax, metric)         # (nq, T)
+    first_term = _interval_dist(q[:, :1], wmin, wmax, metric)      # (nq, T)
+    lb_kim = jnp.where((qlens == 1)[:, None], last_term,
+                       first_term + last_term)
+
+    # Every query point before the last aligns inside the window.
+    contrib = _interval_dist(q[:, :, None], wmin[:, None, :],
+                             wmax[:, None, :], metric)   # (nq, N, T)
+    mid_mask = jnp.arange(n)[None, :] < (qlens - 1)[:, None]
+    mid = jnp.sum(jnp.where(mid_mask[:, :, None], contrib, 0.0), axis=1)
+    lb_keogh = mid + last_term
+
+    return lb_kim * LB_SAFETY, lb_keogh * LB_SAFETY

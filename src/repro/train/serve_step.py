@@ -10,7 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_step, prefill
 
 
 def make_prefill_step(cfg, run, max_len: int, axes=None):

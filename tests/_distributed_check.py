@@ -28,7 +28,7 @@ from repro.distributed import Axes
 from repro.distributed.collectives import compressed_psum
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import tree_shardings
-from repro.models import RunConfig, forward, init_lm, loss_fn
+from repro.models import RunConfig, init_lm, loss_fn
 from repro.models.moe import moe_mlp
 from repro.optim import OptConfig
 from repro.train import TrainConfig, init_train_state, make_train_step
@@ -180,5 +180,23 @@ for dtype in (np.int32, np.float32):
     else:
         np.testing.assert_allclose(got8, want8, rtol=1e-5)
 print("8 OK: sharded sDTW (ppermute boundary-column exchange) matches oracle")
+
+# --- 9. sharded top-K merge (heap rides the systolic carry) ---------------
+from repro.core.sdtw import sdtw_chunked
+
+qs9 = rng8.integers(-40, 40, (8, 6)).astype(np.int32)
+r9 = rng8.integers(-40, 40, 97).astype(np.int32)
+sd, sp = engine_sdtw(jnp.asarray(qs9), jnp.asarray(r9), mesh=ref_mesh,
+                     chunk=8, top_k=3, excl_zone=4)
+cd, cp = sdtw_chunked(jnp.asarray(qs9), jnp.asarray(r9), chunk=8, top_k=3,
+                      excl_zone=4)
+np.testing.assert_array_equal(np.asarray(sd), np.asarray(cd))
+np.testing.assert_array_equal(np.asarray(sp), np.asarray(cp))
+d9, p9 = engine_sdtw(jnp.asarray(qs9), jnp.asarray(r9), mesh=ref_mesh,
+                     chunk=8, return_positions=True)
+np.testing.assert_array_equal(np.asarray(d9), np.asarray(cd)[:, 0])
+np.testing.assert_array_equal(np.asarray(p9), np.asarray(cp)[:, 0])
+print("9 OK: sharded top-K heap (carry-merged across shards) matches "
+      "single-process streamer bitwise")
 
 print("DISTRIBUTED_ALL_OK")

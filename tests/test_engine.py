@@ -184,9 +184,11 @@ def test_impl_escape_hatch_agrees(rng):
     q = rng.integers(-40, 40, (4, 8)).astype(np.int32)
     r = rng.integers(-40, 40, 70).astype(np.int32)
     want = np.array([sdtw_ref(q[i], r) for i in range(4)])
-    for impl in ("rowscan", "wavefront", "pallas", "chunked"):
+    for impl, kw in (("rowscan", {}), ("wavefront", {}),
+                     ("pallas", {}), ("pallas", {"chunk": 16}),
+                     ("chunked", {"chunk": 16})):
         got = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), impl=impl,
-                              chunk=16))
+                              **kw))
         np.testing.assert_array_equal(got, want)
 
 
@@ -208,3 +210,152 @@ def test_bad_impl_rejected():
     with pytest.raises(ValueError, match="impl"):
         sdtw(jnp.zeros((1, 4), jnp.int32), jnp.zeros(8, jnp.int32),
              impl="vibes")
+
+
+def test_forced_impl_contradictions_rejected():
+    """Forced impls reject arguments that belong to another path instead of
+    silently ignoring them (explicit precedence)."""
+    q = jnp.zeros((2, 4), jnp.int32)
+    r = jnp.zeros(16, jnp.int32)
+    mesh = object()
+    cases = [
+        (dict(impl="rowscan", chunk=8), "ignore chunk"),
+        (dict(impl="wavefront", chunk=8), "ignore chunk"),
+        (dict(impl="rowscan", mesh=mesh), "sharded driver"),
+        (dict(impl="wavefront", mesh=mesh), "sharded driver"),
+        (dict(impl="pallas", mesh=mesh), "single-device"),
+        (dict(impl="chunked", mesh=mesh), "single-device"),
+        (dict(impl="rowscan", top_k=2), "top-K heap"),
+        (dict(impl="pallas", top_k=2), "best end position"),
+        (dict(top_k=0), "positive int"),
+    ]
+    for kw, match in cases:
+        with pytest.raises(ValueError, match=match):
+            sdtw(q, r, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Top-K / match-position modes
+# ---------------------------------------------------------------------------
+
+def _pos_oracle(q, r, metric="abs_diff"):
+    from repro.core import sdtw_matrix
+    return int(np.argmin(sdtw_matrix(q, r, metric)[-1]))
+
+
+def test_return_positions_all_impls_agree(rng):
+    """Every impl (incl. pallas, streamed pallas, chunked) reports the same
+    leftmost end position as the oracle matrix argmin."""
+    q = rng.integers(-40, 40, (4, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 70).astype(np.int32)
+    qj, rj = jnp.asarray(q), jnp.asarray(r)
+    want_d = np.array([sdtw_ref(q[i], r) for i in range(4)])
+    want_p = np.array([_pos_oracle(q[i], r) for i in range(4)])
+    for impl, kw in (("rowscan", {}), ("wavefront", {}), ("pallas", {}),
+                     ("pallas", {"chunk": 16}), ("chunked", {"chunk": 16})):
+        d, p = sdtw(qj, rj, impl=impl, return_positions=True, **kw)
+        np.testing.assert_array_equal(np.asarray(d), want_d, err_msg=impl)
+        np.testing.assert_array_equal(np.asarray(p), want_p, err_msg=impl)
+
+
+def test_topk_auto_routes_to_chunked_and_matches_greedy(rng):
+    """engine.sdtw(top_k=) == greedy suppression on the oracle last row;
+    top-1 column equals the plain-call distance bitwise."""
+    from repro.core import sdtw_matrix
+    q = rng.integers(-40, 40, (3, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 120).astype(np.int32)
+    k, zone = 3, 5
+    d, p = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=k, excl_zone=zone)
+    d, p = np.asarray(d), np.asarray(p)
+    plain = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r)))
+    np.testing.assert_array_equal(d[:, 0], plain)
+    for i in range(3):
+        row = sdtw_matrix(q[i], r)[-1].copy()
+        for kk in range(k):
+            j = int(np.argmin(row))
+            assert p[i, kk] == j
+            assert d[i, kk] == row[j]
+            row[np.abs(np.arange(len(row)) - j) <= zone] = np.inf
+    # Suppressed matches are genuinely distinct.
+    for i in range(3):
+        ps = p[i][p[i] >= 0]
+        assert all(abs(int(a) - int(b)) > zone
+                   for x, a in enumerate(ps) for b in ps[x + 1:])
+
+
+def test_topk_chunk_size_invariance(rng):
+    """The streamed heap must not depend on the tile size."""
+    q = rng.integers(-40, 40, (2, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 137).astype(np.int32)
+    outs = [sdtw_chunked(jnp.asarray(q), jnp.asarray(r), chunk=c, top_k=3,
+                         excl_zone=4) for c in (1, 5, 8, 137, 1024)]
+    for d, p in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(d))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]), np.asarray(p))
+
+
+@pytest.mark.parametrize("excl_zone", [3, None])
+def test_topk_single_query_and_ragged(rng, excl_zone):
+    """Ragged bucketed top-K must equal the per-query call — including the
+    *default* excl_zone, which is derived from each query's true length,
+    never the padded bucket width."""
+    r = rng.integers(-40, 40, 90).astype(np.int32)
+    q1 = rng.integers(-40, 40, 7).astype(np.int32)
+    q2 = rng.integers(-40, 40, 12).astype(np.int32)
+    d, p = sdtw(jnp.asarray(q1), jnp.asarray(r), top_k=2,
+                excl_zone=excl_zone)
+    assert d.shape == (2,) and p.shape == (2,)
+    dr, pr = sdtw([jnp.asarray(q1), jnp.asarray(q2)], jnp.asarray(r),
+                  top_k=2, excl_zone=excl_zone)
+    np.testing.assert_array_equal(np.asarray(dr[0]), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(pr[0]), np.asarray(p))
+    d2, p2 = sdtw(jnp.asarray(q2), jnp.asarray(r), top_k=2,
+                  excl_zone=excl_zone)
+    np.testing.assert_array_equal(np.asarray(dr[1]), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(pr[1]), np.asarray(p2))
+
+
+def test_topk_default_zone_uses_true_qlen(rng):
+    """A padded batch with a short qlen gets zone = qlen//2, not padded//2:
+    identical to calling with the unpadded query."""
+    r = rng.integers(-40, 40, 90).astype(np.int32)
+    q = rng.integers(-40, 40, 7).astype(np.int32)
+    qpad = np.zeros((1, 16), np.int32)
+    qpad[0, :7] = q
+    d_pad, p_pad = sdtw_chunked(jnp.asarray(qpad), jnp.asarray(r),
+                                jnp.asarray([7], jnp.int32), top_k=3)
+    d_raw, p_raw = sdtw_chunked(jnp.asarray(q)[None, :], jnp.asarray(r),
+                                top_k=3)
+    np.testing.assert_array_equal(np.asarray(d_pad), np.asarray(d_raw))
+    np.testing.assert_array_equal(np.asarray(p_pad), np.asarray(p_raw))
+
+
+def test_topk_respects_exclusion_columns(rng):
+    """Banned reference columns can never be reported as match ends."""
+    q = rng.integers(-40, 40, (1, 6)).astype(np.int32)
+    r = rng.integers(-40, 40, 64).astype(np.int32)
+    lo, hi = jnp.asarray([20]), jnp.asarray([40])
+    d, p = sdtw(q, jnp.asarray(r), top_k=4, excl_zone=2,
+                excl_lo=lo, excl_hi=hi)
+    ps = np.asarray(p)[0]
+    assert not np.any((ps >= 20) & (ps < 40))
+
+
+def test_pallas_streamed_carry_positions(rng):
+    """impl='pallas' + chunk= streams slices through the kernel carry and
+    still reports exact global positions (slice point ∤ block_m)."""
+    q = rng.integers(-40, 40, (3, 7)).astype(np.int32)
+    r = rng.integers(-40, 40, 53).astype(np.int32)
+    d, p = sdtw(jnp.asarray(q), jnp.asarray(r), impl="pallas", chunk=21,
+                return_positions=True, block_q=2, block_m=8)
+    want_d = np.array([sdtw_ref(q[i], r) for i in range(3)])
+    want_p = np.array([_pos_oracle(q[i], r) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(d), want_d)
+    np.testing.assert_array_equal(np.asarray(p), want_p)
+
+
+def test_choose_impl_topk_routes_chunked():
+    assert choose_impl(8, 16, 4096, backend="cpu", top_k=5) == "chunked"
+    assert choose_impl(8, 16, 4096, backend="tpu", top_k=5) == "chunked"
+    assert choose_impl(8, 16, 4096, backend="cpu", mesh=object(),
+                       top_k=5) == "sharded"

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, all_archs, cells, get_arch
-from repro.launch.roofline import (RooflineTerms, V5E, collective_bytes,
-                                   model_flops, roofline)
+from repro.launch.roofline import collective_bytes, model_flops, roofline
 from repro.launch.specs import input_specs, run_config_for
 from repro.models import RunConfig
 

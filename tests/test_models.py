@@ -7,9 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, all_archs, get_arch
-from repro.models import (RunConfig, decode_step, forward, init_cache,
-                          init_lm, loss_fn, prefill)
+from repro.configs import all_archs, get_arch
+from repro.models import RunConfig, decode_step, forward, init_lm, prefill
 from repro.optim import OptConfig
 from repro.train import TrainConfig, init_train_state, make_train_step
 

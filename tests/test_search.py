@@ -1,0 +1,320 @@
+"""The search subsystem: top-K heaps, the LB_Kim/LB_Keogh cascade
+(admissibility against a brute-force span-capped oracle), the envelope
+cache, and the `search_topk` front door (oracle equivalence with the
+engine, pruning exactness, exclusion-zone distinctness, normalization)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sdtw, sdtw_matrix, sdtw_ref
+from repro.core.distances import INT_BIG
+from repro.core.sdtw_ref import dtw_ref
+from repro.core.topk import topk_init, topk_merge, topk_select
+from repro.search import (EnvelopeCache, chunk_envelope, lb_cascade,
+                          search_topk, windowed_envelope, znorm_padded)
+from repro.search.search import DEFAULT_SPAN_FACTOR
+
+
+def heterogeneous_reference(rng, m, seg):
+    """Piecewise level-shifted noise — the regime envelope pruning targets."""
+    levels = rng.integers(-1500, 1500, -(-m // seg))
+    return np.concatenate([
+        lvl + rng.normal(0, 40, seg) for lvl in levels])[:m].astype(np.int32)
+
+
+def greedy_topk_oracle(last_row, k, zone):
+    """Best-first selection with exclusion suppression on the full DP last
+    row (float64) — the semantics `repro.core.topk` implements streamed."""
+    row = last_row.astype(np.float64).copy()
+    out = []
+    for _ in range(k):
+        j = int(np.argmin(row))
+        v = row[j]
+        if v >= INT_BIG or not np.isfinite(v):
+            out.append((np.inf, -1))
+            continue
+        out.append((v, j))
+        row[np.abs(np.arange(len(row)) - j) <= zone] = np.inf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Oracle: search_topk == engine.sdtw (the acceptance sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("chunk", [32, 64, 512])
+def test_search_top1_no_prune_bitwise_vs_engine(metric, chunk, rng):
+    """k=1, no pruning: distance bitwise-equal to engine.sdtw(), position
+    equal to the leftmost argmin of the oracle matrix's last row."""
+    q = rng.integers(-40, 40, (4, 12)).astype(np.int32)
+    r = rng.integers(-40, 40, 333).astype(np.int32)
+    res = search_topk(jnp.asarray(q), jnp.asarray(r), k=1, prune=False,
+                      chunk=chunk, metric=metric)
+    want = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), metric=metric))
+    np.testing.assert_array_equal(np.asarray(res.distances)[:, 0], want)
+    pos_want = [int(np.argmin(sdtw_matrix(q[i], r, metric)[-1]))
+                for i in range(4)]
+    np.testing.assert_array_equal(np.asarray(res.positions)[:, 0], pos_want)
+    assert res.chunks_pruned == 0
+
+
+def test_search_top1_no_prune_float32(rng):
+    """float32: bitwise against the engine's own chunked path (identical
+    computation), allclose against the float64 oracle."""
+    q = (rng.integers(-40, 40, (3, 9)) + 0.25).astype(np.float32)
+    r = (rng.integers(-40, 40, 200) + 0.5).astype(np.float32)
+    res = search_topk(jnp.asarray(q), jnp.asarray(r), k=1, prune=False,
+                      chunk=32)
+    want_d, want_p = sdtw(jnp.asarray(q), jnp.asarray(r), impl="chunked",
+                          chunk=32, return_positions=True)
+    np.testing.assert_array_equal(np.asarray(res.distances)[:, 0],
+                                  np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(res.positions)[:, 0],
+                                  np.asarray(want_p))
+    oracle = [sdtw_ref(q[i], r) for i in range(3)]
+    np.testing.assert_allclose(np.asarray(res.distances)[:, 0], oracle,
+                               rtol=1e-5)
+
+
+def test_search_pruned_top1_exact_and_prunes(rng):
+    """Pruning enabled on heterogeneous data: ≥1 chunk pruned, top-1
+    distance still bitwise-equal to the engine."""
+    ref = heterogeneous_reference(rng, 4096, 512)
+    n = 48
+    q = np.stack([ref[1000:1000 + n],
+                  ref[3000:3000 + n] + rng.integers(-2, 3, n)]).astype(
+                      np.int32)
+    res = search_topk(jnp.asarray(q), jnp.asarray(ref), k=3, chunk=256)
+    want = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(ref)))
+    np.testing.assert_array_equal(np.asarray(res.distances)[:, 0], want)
+    assert res.chunks_pruned > 0
+    assert res.chunks_pruned + res.chunks_processed == res.chunks_total
+
+
+def test_search_topk_matches_greedy_oracle_no_prune(rng):
+    """Full-k streamed heap == greedy suppression on the oracle last row."""
+    q = rng.integers(-40, 40, (2, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 150).astype(np.int32)
+    k, zone = 4, 6
+    res = search_topk(jnp.asarray(q), jnp.asarray(r), k=k, prune=False,
+                      chunk=16, excl_zone=zone)
+    d = np.asarray(res.distances)
+    p = np.asarray(res.positions)
+    for i in range(2):
+        want = greedy_topk_oracle(sdtw_matrix(q[i], r)[-1], k, zone)
+        for kk, (wd, wp) in enumerate(want):
+            assert p[i, kk] == wp
+            if wp >= 0:
+                assert d[i, kk] == wd
+
+
+def test_search_excl_zone_distinct_motifs(rng):
+    """Two planted motifs must both surface, positions > excl_zone apart."""
+    ref = heterogeneous_reference(rng, 2048, 256)
+    n = 32
+    motif = rng.integers(-3000, -2500, n).astype(np.int32)  # out-of-range
+    ref[400:400 + n] = motif
+    ref[1500:1500 + n] = motif + 1
+    res = search_topk(jnp.asarray(motif), jnp.asarray(ref), k=2, chunk=128)
+    pos = sorted(int(x) for x in np.asarray(res.positions))
+    assert pos == [400 + n - 1, 1500 + n - 1]
+    for a in np.asarray(res.positions):
+        for b in np.asarray(res.positions):
+            assert a == b or abs(int(a) - int(b)) > n // 2
+
+
+# ---------------------------------------------------------------------------
+# Lower-bound admissibility
+# ---------------------------------------------------------------------------
+
+def span_capped_best(q, r, j_range, cap, metric):
+    """Brute force: cheapest alignment of the whole query ending at any
+    j in j_range with warping span <= cap columns (pinned-ends DTW over
+    every allowed window)."""
+    best = np.inf
+    for j in j_range:
+        for a in range(max(0, j - cap + 1), j + 1):
+            best = min(best, dtw_ref(q, r[a:j + 1], metric))
+    return best
+
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+def test_lb_cascade_admissible_vs_bruteforce(metric, rng):
+    """Neither bound may exceed the true cost of the best span-capped match
+    ending in its chunk, and LB_Keogh dominates LB_Kim."""
+    nq, n, m, chunk = 2, 5, 40, 8
+    cap = DEFAULT_SPAN_FACTOR * n
+    halo = -(-cap // chunk)
+    for trial in range(5):
+        q = rng.integers(-30, 30, (nq, n)).astype(np.int32)
+        r = rng.integers(-30, 30, m).astype(np.int32)
+        mins, maxs = chunk_envelope(jnp.asarray(r), chunk)
+        qlens = jnp.full((nq,), n, jnp.int32)
+        kim, keogh = lb_cascade(jnp.asarray(q), qlens, mins, maxs, halo,
+                                metric)
+        kim, keogh = np.asarray(kim), np.asarray(keogh)
+        assert np.all(kim <= keogh + 1e-4)
+        for c in range(-(-m // chunk)):
+            js = range(c * chunk, min(m, (c + 1) * chunk))
+            for i in range(nq):
+                true = span_capped_best(q[i], r, js, cap, metric)
+                assert kim[i, c] <= true + 1e-6, (trial, i, c)
+                assert keogh[i, c] <= true + 1e-6, (trial, i, c)
+
+
+def test_lb_never_prunes_best_chunk(rng):
+    """With span_cap covering the whole reference (unconditional bounds),
+    the chunk holding the true best match always bounds at or below the
+    true best distance — pruning can never drop it."""
+    n, m, chunk = 6, 96, 16
+    halo = -(-m // chunk)                      # window = everything left
+    for trial in range(20):
+        q = rng.integers(-50, 50, n).astype(np.int32)
+        r = rng.integers(-50, 50, m).astype(np.int32)
+        if trial % 3 == 0:
+            s = int(rng.integers(0, m - n))
+            r[s:s + n] = q                     # planted exact match
+        d, p = sdtw(jnp.asarray(q), jnp.asarray(r), return_positions=True)
+        mins, maxs = chunk_envelope(jnp.asarray(r), chunk)
+        kim, keogh = lb_cascade(q[None, :].astype(np.int32),
+                                jnp.asarray([n], jnp.int32), mins, maxs,
+                                halo)
+        c_best = int(p) // chunk
+        assert float(np.asarray(kim)[0, c_best]) <= float(d) + 1e-6
+        assert float(np.asarray(keogh)[0, c_best]) <= float(d) + 1e-6
+
+
+def test_lb_admissibility_hypothesis(rng):
+    """Property-based version of the brute-force admissibility check."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    n, m, chunk = 4, 24, 8
+    cap = DEFAULT_SPAN_FACTOR * n
+    halo = -(-cap // chunk)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(-20, 20), min_size=n + m, max_size=n + m))
+    def prop(vals):
+        q = np.asarray(vals[:n], np.int32)
+        r = np.asarray(vals[n:], np.int32)
+        mins, maxs = chunk_envelope(jnp.asarray(r), chunk)
+        _, keogh = lb_cascade(q[None, :], jnp.asarray([n], jnp.int32),
+                              mins, maxs, halo)
+        keogh = np.asarray(keogh)[0]
+        for c in range(-(-m // chunk)):
+            js = range(c * chunk, min(m, (c + 1) * chunk))
+            true = span_capped_best(q, r, js, cap, "abs_diff")
+            assert keogh[c] <= true + 1e-6
+
+    prop()
+
+
+def test_windowed_envelope_widens_left():
+    mins = jnp.asarray([0., 10., -5., 3.])
+    maxs = jnp.asarray([1., 12., -2., 4.])
+    wmin, wmax = windowed_envelope(mins, maxs, 1)
+    np.testing.assert_allclose(np.asarray(wmin), [0., 0., -5., -5.])
+    np.testing.assert_allclose(np.asarray(wmax), [1., 12., 12., 4.])
+
+
+# ---------------------------------------------------------------------------
+# Top-K heap primitives
+# ---------------------------------------------------------------------------
+
+def test_topk_select_suppression_and_padding():
+    scores = jnp.asarray([5., 3., 4., 9., 1.], jnp.float32)
+    pos = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
+    d, p = topk_select(scores, pos, 3, 1)
+    # 1@4 suppresses 9@3; 3@1 suppresses 5@0 and 4@2 → only 2 matches.
+    np.testing.assert_array_equal(np.asarray(p), [4, 1, -1])
+    assert np.asarray(d)[2] == np.inf
+
+
+def test_topk_merge_tie_prefers_heap():
+    """Exact ties keep the earlier (heap/earlier-chunk) position."""
+    hd, hp = topk_init(1, 1, jnp.float32)
+    d1, p1 = topk_merge(hd[0], hp[0], jnp.asarray([7.], jnp.float32),
+                        jnp.asarray([10], jnp.int32), 1, 2)
+    d2, p2 = topk_merge(d1, p1, jnp.asarray([7.], jnp.float32),
+                        jnp.asarray([50], jnp.int32), 1, 2)
+    assert int(p2[0]) == 10 and float(d2[0]) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# Front-door plumbing
+# ---------------------------------------------------------------------------
+
+def test_envelope_cache_hits(rng):
+    r = jnp.asarray(rng.integers(-40, 40, 128).astype(np.int32))
+    cache = EnvelopeCache()
+    e1 = cache.envelope(r, 32, key="k")
+    e2 = cache.envelope(r, 32, key="k")
+    assert cache.hits == 1 and cache.misses == 1 and len(cache) == 1
+    np.testing.assert_array_equal(np.asarray(e1[0]), np.asarray(e2[0]))
+    cache.envelope(r, 16, key="k")             # different chunk → new entry
+    assert cache.misses == 2
+    # Fingerprint path (no key) is deterministic.
+    cache.envelope(r, 32)
+    cache.envelope(r, 32)
+    assert cache.hits == 2 and cache.misses == 3
+
+
+def test_cache_key_isolates_normalized_searches(rng):
+    """A normalized and a raw search sharing ref_key must not share
+    envelope entries — a stale raw envelope would mis-prune the
+    normalized search (and vice versa)."""
+    ref = heterogeneous_reference(rng, 2048, 256)
+    n = 32
+    q = ref[900:900 + n].astype(np.int32)
+    cache = EnvelopeCache()
+    res_n = search_topk(jnp.asarray(q), jnp.asarray(ref), k=1, chunk=128,
+                        normalize=True, cache=cache, ref_key="shared")
+    res_r = search_topk(jnp.asarray(q), jnp.asarray(ref), k=1, chunk=128,
+                        cache=cache, ref_key="shared")
+    assert cache.misses == 2 and len(cache) == 2   # no cross-contamination
+    want = np.asarray(sdtw(jnp.asarray(q), jnp.asarray(ref)))
+    assert np.asarray(res_r.distances)[0] == want  # raw prune still exact
+    assert np.isfinite(float(res_n.distances[0]))
+
+
+def test_ragged_search_matches_per_query(rng):
+    r = rng.integers(-50, 50, 200).astype(np.int32)
+    ragged = [rng.integers(-50, 50, L).astype(np.int32) for L in (5, 17, 9)]
+    res = search_topk([jnp.asarray(x) for x in ragged], jnp.asarray(r),
+                      k=2, prune=False, chunk=32, excl_zone=3)
+    for i, q in enumerate(ragged):
+        one = search_topk(jnp.asarray(q), jnp.asarray(r), k=2, prune=False,
+                          chunk=32, excl_zone=3)
+        np.testing.assert_array_equal(np.asarray(res.distances)[i],
+                                      np.asarray(one.distances))
+        np.testing.assert_array_equal(np.asarray(res.positions)[i],
+                                      np.asarray(one.positions))
+
+
+def test_normalize_finds_scaled_motif(rng):
+    """A gain/offset-shifted copy of a reference window (different sensor
+    calibration) is found only after z-normalization. The reference is a
+    fast quasi-random oscillation so every window shares the global
+    moments — the regime global z-norm is exact for."""
+    ref = (100 * np.sin(np.arange(512) * 2.63)
+           + rng.normal(0, 2, 512)).astype(np.float32)
+    n = 40
+    motif = ref[300:300 + n] * 3.0 + 2000.0    # scaled + offset copy
+    res = search_topk(jnp.asarray(motif), jnp.asarray(ref), k=1,
+                      normalize=True, chunk=64, prune=False)
+    assert abs(int(res.positions[0]) - (300 + n - 1)) <= 2
+    mask_aware = znorm_padded(jnp.asarray(motif)[None, :],
+                              jnp.asarray([n], jnp.int32))
+    assert abs(float(jnp.mean(mask_aware))) < 1e-5
+
+
+def test_search_arg_validation(rng):
+    q = jnp.zeros((2, 4), jnp.int32)
+    r = jnp.zeros(32, jnp.int32)
+    with pytest.raises(ValueError, match="k must be"):
+        search_topk(q, r, k=0)
+    with pytest.raises(ValueError, match="prune=False"):
+        search_topk(q, r, mesh=object())
