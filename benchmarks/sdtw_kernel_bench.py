@@ -7,6 +7,10 @@ unified engine's chunked-streaming path on a long reference (the regime of
 the paper's Seismology/Power/ECG workloads, M ≈ 1.7–1.8M). Feeds
 EXPERIMENTS.md §Perf (paper-faithful baseline vs optimized, measured).
 
+Also measures what the span/traceback features cost: the start-pointer
+lane (``return_spans=True``) against the plain distance call, and the
+full ``engine.align()`` path recovery (span search + windowed replay).
+
 ``smoke=True`` shrinks every shape so the bench-smoke CI job exercises the
 full code path in seconds.
 """
@@ -15,11 +19,50 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.core import sdtw, sdtw_batch
-from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
+from repro.core import align, sdtw, sdtw_batch
+from repro.core.distances import accum_dtype, big, pointwise_distance, sat_add
+from repro.kernels.sdtw import sdtw_pallas
 
 from .common import emit, print_rows, time_call
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _naive_scan_baseline(queries, reference, metric: str = "abs_diff"):
+    """The simplest possible jnp formulation — sequential scan over rows
+    with a sequential scan over columns. Benchmark baseline only; the test
+    oracle lives in ``tests/oracle.py``."""
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    BIG = big(acc)
+    b, n = queries.shape
+
+    def one(query):
+        d_row0 = pointwise_distance(query[0], reference, metric)
+        best0 = jnp.where(n == 1, jnp.min(d_row0), BIG)
+
+        def row(carry, qi):
+            prev, best, i = carry
+            d = pointwise_distance(qi, reference, metric)
+
+            def col(s_left, xs):
+                dj, p_diag, p_up = xs
+                s = sat_add(dj, jnp.minimum(jnp.minimum(p_diag, p_up),
+                                            s_left))
+                return s, s
+
+            s0 = sat_add(prev[0], d[0])
+            _, s_rest = lax.scan(col, s0, (d[1:], prev[:-1], prev[1:]))
+            s = jnp.concatenate([s0[None], s_rest])
+            best = jnp.where(i == n - 1, jnp.minimum(best, jnp.min(s)),
+                             best)
+            return (s, best, i + 1), None
+
+        (_, best, _), _ = lax.scan(row, (d_row0, best0, jnp.int32(1)),
+                                   query[1:])
+        return best
+
+    return jax.vmap(one)(queries)
 
 
 def main(smoke: bool = False):
@@ -30,7 +73,7 @@ def main(smoke: bool = False):
     r = jnp.asarray(rng.integers(-100, 100, m).astype(np.int32))
 
     fns = {
-        "naive_scan_oracle": lambda: sdtw_ref_jnp(q, r),
+        "naive_scan_baseline": lambda: _naive_scan_baseline(q, r),
         "wavefront_paper_faithful": functools.partial(
             sdtw_batch, q, r, impl="wavefront"),
         "rowscan_tropical": functools.partial(
@@ -40,6 +83,7 @@ def main(smoke: bool = False):
         "engine_auto": functools.partial(sdtw, q, r),
     }
     base = None
+    engine_us = None
     for name, fn in fns.items():
         us = time_call(fn, repeats=3, warmup=1)
         cells = b * n * m
@@ -49,6 +93,19 @@ def main(smoke: bool = False):
                          f"Mcells_per_s={rate:.1f}{speedup}"))
         if base is None:
             base = us
+        if name == "engine_auto":
+            engine_us = us
+
+    # Span / traceback overhead: the start-pointer lane doubles every DP
+    # lane (value + int32 start), align() adds the windowed path replay.
+    us_spans = time_call(functools.partial(sdtw, q, r, return_spans=True),
+                         repeats=3, warmup=1)
+    rows.append(emit(f"sdtw_kernel/engine_spans_b{b}_n{n}_m{m}", us_spans,
+                     f"span_overhead_vs_plain={us_spans/engine_us:.2f}x"))
+    us_align = time_call(functools.partial(align, q, r), repeats=3,
+                         warmup=1)
+    rows.append(emit(f"sdtw_kernel/engine_align_b{b}_n{n}_m{m}", us_align,
+                     f"traceback_overhead_vs_plain={us_align/engine_us:.2f}x"))
 
     # Long-reference sweep: engine chunked streaming, M ≥ 256K in bounded
     # memory (only the (b, N) boundary column crosses chunk boundaries).
@@ -56,6 +113,7 @@ def main(smoke: bool = False):
     ql = jnp.asarray(rng.integers(-100, 100, (bl, nl)).astype(np.int32))
     rl = jnp.asarray(rng.integers(-100, 100, ml).astype(np.int32))
     chunks = (512, 1024) if smoke else (8192, 32768)
+    us_plain = None
     for chunk in chunks:
         fn = functools.partial(sdtw, ql, rl, impl="chunked", chunk=chunk)
         us = time_call(fn, repeats=3, warmup=1)
@@ -64,6 +122,14 @@ def main(smoke: bool = False):
         rows.append(emit(
             f"sdtw_kernel/engine_chunked_b{bl}_n{nl}_m{ml}_c{chunk}", us,
             f"Mcells_per_s={rate:.1f}"))
+        us_plain = us
+    # Streamed span lane on the same long reference (last chunk size).
+    fn = functools.partial(sdtw, ql, rl, impl="chunked", chunk=chunks[-1],
+                           return_spans=True)
+    us = time_call(fn, repeats=3, warmup=1)
+    rows.append(emit(
+        f"sdtw_kernel/engine_chunked_spans_b{bl}_n{nl}_m{ml}_c{chunks[-1]}",
+        us, f"span_overhead_vs_plain={us/us_plain:.2f}x"))
     return rows
 
 

@@ -21,7 +21,25 @@ import numpy as np
 # can close over it without capturing a traced constant.
 INT_BIG = 2**29
 
+# Start-pointer-lane filler for cells with no (finite) path yet. Larger
+# than any real reference column so a BIG-valued lane never wins a
+# lexicographic tie against a genuine start. Plain python int for the same
+# Pallas-closure reason as INT_BIG.
+INT_FAR = 2**31 - 1
+
 METRICS = ("abs_diff", "square_diff")
+
+
+def lex_min(v1, s1, v2, s2):
+    """Lexicographic min over (value, start) lane pairs: lower value wins,
+    value ties take the smaller start.
+
+    This single definition is the tie-break rule behind the cross-regime
+    "spans are bitwise-identical" guarantee — every execution scheme
+    (rowscan scan, wavefront shift, Pallas doubling, chunk carry) must use
+    it, never a local copy."""
+    take2 = (v2 < v1) | ((v2 == v1) & (s2 < s1))
+    return jnp.where(take2, v2, v1), jnp.where(take2, s2, s1)
 
 
 def accum_dtype(dtype) -> jnp.dtype:

@@ -36,14 +36,25 @@ is streamed through the kernel in ``chunk``-sized slices via the kernel's
 chunk-carry protocol (one kernel launch per slice), which is how a
 TPU-resident caller bounds the per-launch reference footprint.
 
+Match spans: ``return_spans=True`` returns ``(dists, starts, ends)`` on
+every path — the DP carries a start-pointer lane (each cell remembers the
+row-0 reference column its best alignment began at, lexicographic
+tie-break toward the smaller start; see ``repro.core.sdtw``), so the span
+is exact and identical across all five regimes. ``engine.align()`` goes
+one step further and recovers the full warping path by re-running the DP
+inside the span window only (``repro.core.traceback``).
+
 Top-K search mode: ``top_k=k`` returns the k best *match end positions*
-per query, ``(dists (nq, k), positions (nq, k))``, best first, with an
-exclusion zone (``excl_zone``, default: half of each query's true
-length) keeping the matches
-non-trivially distinct; the heap rides the chunk boundary carry
-(streaming/sharded paths). ``return_positions=True`` alone returns the
-top-1 pair ``(dists (nq,), positions (nq,))`` and is supported on every
-path (the Pallas kernel tracks the best end position in its carry).
+per query, ``(dists (nq, k), positions (nq, k))`` — or
+``(dists, starts, ends)`` with ``return_spans=True`` — best first, with
+an exclusion zone (``excl_zone``, default: half of each query's true
+length) keeping the matches non-trivially distinct;
+``excl_mode='span'`` keys the suppression on span overlap instead of end
+distance (default zone 0: reported events share no reference samples).
+The heap rides the chunk boundary carry (streaming/sharded paths).
+``return_positions=True`` alone returns the top-1 pair
+``(dists (nq,), positions (nq,))`` and is supported on every path (the
+Pallas kernel tracks the best end position in its carry).
 
 Ragged batches: a *list* of 1-D queries with mixed lengths is bucketed —
 each query is padded up to the next power-of-two length (min
@@ -59,9 +70,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .distances import big
 from .sdtw import sdtw_batch, sdtw_chunked
+from .traceback import AlignResult, DEFAULT_TRACE_CHUNK, traceback_path
 
 IMPLS = ("auto", "rowscan", "wavefront", "pallas", "chunked", "sharded")
+EXCL_MODES = ("end", "span")
 
 CHUNK_THRESHOLD = 1 << 17   # auto-switch to streaming above this M
 DEFAULT_CHUNK = 8192        # tile size for chunked/sharded streaming
@@ -148,8 +162,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
          impl: str = "auto", chunk: Optional[int] = None,
          excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
          top_k: Optional[int] = None, return_positions: bool = False,
-         excl_zone: Optional[int] = None,
-         block_q: int = 8, block_m: int = 512):
+         return_spans: bool = False, excl_zone: Optional[int] = None,
+         excl_mode: str = "end", block_q: int = 8, block_m: int = 512):
     """Subsequence-DTW distances of ``queries`` against ``reference``.
 
     Args:
@@ -173,20 +187,33 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  suppressed so positions are > ``excl_zone`` apart.
       return_positions: return ``(dists, end_positions)`` (top-1); without
                  ``top_k`` this works on every impl.
+      return_spans: return ``(dists, starts, ends)`` — the start-pointer
+                 lane; works on every impl, stacks to (nq, k) with top_k.
       excl_zone: top-K suppression radius; scalar, or default half of
-                 each query's true length.
+                 each query's true length (0 with ``excl_mode='span'``).
+      excl_mode: 'end' suppresses matches whose *end* is within
+                 ``excl_zone``; 'span' suppresses matches whose spans
+                 overlap (widened by ``excl_zone``). Only meaningful with
+                 ``top_k``.
       block_q/block_m: Pallas kernel block shape.
 
     Returns: (nq,) distances in the accumulator dtype — scalar for a single
-    1-D query; a (dists, positions) pair in the top-K/positions modes.
+    1-D query; a (dists, positions) pair or (dists, starts, ends) triple
+    in the positions/spans modes.
     """
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if excl_mode not in EXCL_MODES:
+        raise ValueError(f"excl_mode must be one of {EXCL_MODES}, got "
+                         f"{excl_mode!r}")
     if (excl_lo is None) != (excl_hi is None):
         raise ValueError("excl_lo and excl_hi must be given together "
                          "(a one-sided zone would silently ban nothing)")
     if top_k is not None and (not isinstance(top_k, int) or top_k < 1):
         raise ValueError(f"top_k must be a positive int, got {top_k!r}")
+    if excl_mode == "span" and top_k is None:
+        raise ValueError("excl_mode='span' only affects top-K suppression; "
+                         "pass top_k= (k=1 selection never suppresses)")
     _check_forced_impl(impl, mesh=mesh, chunk=chunk, top_k=top_k)
 
     if _is_ragged(queries):
@@ -196,7 +223,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                             chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
                             mesh=mesh, ref_axis=ref_axis, top_k=top_k,
                             return_positions=return_positions,
-                            excl_zone=excl_zone,
+                            return_spans=return_spans, excl_zone=excl_zone,
+                            excl_mode=excl_mode,
                             block_q=block_q, block_m=block_m)
 
     queries = jnp.asarray(queries)
@@ -221,23 +249,27 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
         lo = _normalize_excl(excl_lo, nq) if has_excl else None
         hi = _normalize_excl(excl_hi, nq) if has_excl else None
         out = sdtw_batch(queries, reference, qlens, metric, impl, lo, hi,
-                         return_positions)
+                         return_positions=return_positions,
+                         return_spans=return_spans)
     elif impl == "pallas":
         from repro.kernels.sdtw import sdtw_pallas
         if chunk is None:
             out = sdtw_pallas(queries, reference, qlens, metric,
                               block_q=block_q, block_m=block_m,
-                              return_positions=return_positions)
+                              return_positions=return_positions,
+                              return_spans=return_spans)
         else:
             out = _pallas_streamed(queries, reference, qlens, metric, chunk,
-                                   block_q, block_m, return_positions)
+                                   block_q, block_m, return_positions,
+                                   return_spans)
     elif impl == "chunked":
         out = sdtw_chunked(queries, reference, qlens, metric,
                            chunk or DEFAULT_CHUNK,
                            _normalize_excl(excl_lo, nq),
                            _normalize_excl(excl_hi, nq),
                            top_k=top_k, excl_zone=excl_zone,
-                           return_positions=return_positions)
+                           return_positions=return_positions,
+                           return_spans=return_spans, excl_mode=excl_mode)
     else:  # sharded
         from repro.distributed.sdtw_sharded import sdtw_sharded
         out = sdtw_sharded(queries, reference, qlens, metric=metric,
@@ -246,18 +278,74 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                            excl_lo=_normalize_excl(excl_lo, nq),
                            excl_hi=_normalize_excl(excl_hi, nq),
                            top_k=top_k, excl_zone=excl_zone,
-                           return_positions=return_positions)
+                           return_positions=return_positions,
+                           return_spans=return_spans, excl_mode=excl_mode)
     if single:
         return (tuple(o[0] for o in out) if isinstance(out, tuple)
                 else out[0])
     return out
 
 
+def align(queries, reference, qlens=None, *, metric: str = "abs_diff",
+          impl: str = "auto", chunk: Optional[int] = None, mesh=None,
+          ref_axis: str = "ref",
+          trace_chunk: int = DEFAULT_TRACE_CHUNK):
+    """Best alignment of each query, localized: span plus full warping path.
+
+    Composes two bounded-memory passes: (1) the engine's span mode finds
+    ``(distance, start, end)`` on whatever execution path ``impl``/"auto"
+    selects; (2) ``repro.core.traceback`` re-runs the DP inside the
+    ``[start, end]`` window only, in ``trace_chunk``-column blocks, to
+    recover the monotone warping path (peak memory
+    O(N·trace_chunk + N·span/trace_chunk), never O(N·M)).
+
+    Returns an ``AlignResult`` for a single 1-D query, else a list of
+    ``AlignResult`` (one per query, in caller order; ragged lists
+    accepted). Saturated matches (distance ≥ BIG — no finite alignment,
+    e.g. fully banned reference) come back with ``start = end = -1`` and
+    ``path = None``.
+    """
+    ragged = _is_ragged(queries)
+    single = not ragged and jnp.asarray(queries).ndim == 1
+    d, s, e = sdtw(queries, reference, qlens, metric=metric, impl=impl,
+                   chunk=chunk, mesh=mesh, ref_axis=ref_axis,
+                   return_spans=True)
+    if single:
+        d, s, e = d[None], s[None], e[None]
+    d = np.asarray(d)
+    s = np.asarray(s, np.int64)
+    e = np.asarray(e, np.int64)
+    if ragged:
+        qs = [np.asarray(q) for q in queries]
+        lens = [len(q) for q in qs]
+    else:
+        q2 = np.asarray(queries)
+        q2 = q2[None, :] if q2.ndim == 1 else q2
+        lens = (np.full((q2.shape[0],), q2.shape[1], np.int64)
+                if qlens is None else np.asarray(qlens, np.int64))
+        qs = [q2[i, :int(lens[i])] for i in range(q2.shape[0])]
+    ref_np = np.asarray(reference)
+    BIG = big(d.dtype)
+    results = []
+    for i, q in enumerate(qs):
+        if d[i] >= BIG or s[i] < 0:
+            results.append(AlignResult(distance=d[i], start=-1, end=-1,
+                                       path=None))
+            continue
+        path = traceback_path(q, ref_np, int(s[i]), int(e[i]),
+                              metric=metric, chunk=trace_chunk)
+        results.append(AlignResult(distance=d[i], start=int(s[i]),
+                                   end=int(e[i]), path=path))
+    return results[0] if single else results
+
+
 def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
-                     block_m, return_positions):
+                     block_m, return_positions, return_spans=False):
     """Stream the reference through the Pallas kernel in chunk-sized slices,
-    chaining the kernel's (bcol, best, pos) carry between launches — the
-    explicit meaning of ``impl='pallas'`` + ``chunk=``."""
+    chaining the kernel carry between launches — the explicit meaning of
+    ``impl='pallas'`` + ``chunk=``. The start-pointer lane joins the carry
+    only when spans are requested (the plain stream keeps the untaxed
+    (bcol, best, pos) triple)."""
     from repro.kernels.sdtw import sdtw_pallas
     m = reference.shape[0]
     if chunk < 1:
@@ -267,7 +355,11 @@ def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
         _, carry = sdtw_pallas(queries, reference[off:off + chunk], qlens,
                                metric, block_q=block_q, block_m=block_m,
                                carry=carry, ref_offset=off,
-                               return_carry=True)
+                               return_carry=True,
+                               track_start=return_spans)
+    if return_spans:
+        _, _, best, pos, start = carry
+        return best, start, pos
     _, best, pos = carry
     return (best, pos) if return_positions else best
 
@@ -304,23 +396,22 @@ def pad_ragged_bucket(qs, idxs, blen: int):
 
 def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
                  excl_hi, mesh, ref_axis, top_k, return_positions,
-                 excl_zone, block_q, block_m):
+                 return_spans, excl_zone, excl_mode, block_q, block_m):
     """Bucketed dispatch for mixed-length query sets."""
     qs = [np.asarray(q) for q in queries]
     nq = len(qs)
-    wants_pair = top_k is not None or return_positions
+    n_out = (3 if return_spans
+             else 2 if (top_k is not None or return_positions) else 1)
     if nq == 0:
-        if wants_pair:
-            kk = 1 if top_k is None else top_k
-            shape = (0,) if top_k is None else (0, kk)
-            return jnp.zeros(shape, jnp.int32), jnp.zeros(shape, jnp.int32)
-        return jnp.zeros((0,), jnp.int32)
+        kk = 1 if top_k is None else top_k
+        shape = (0,) if top_k is None else (0, kk)
+        empty = tuple(jnp.zeros(shape, jnp.int32) for _ in range(n_out))
+        return empty if n_out > 1 else empty[0]
     lo = np.asarray(_normalize_excl(excl_lo, nq))
     hi = np.asarray(_normalize_excl(excl_hi, nq))
     buckets = bucketize([len(q) for q in qs])
 
-    out = [None] * nq
-    pos = [None] * nq
+    outs = [[None] * nq for _ in range(n_out)]
     for blen, idxs in buckets.items():
         padded, qlens = pad_ragged_bucket(qs, idxs, blen)
         res = sdtw(jnp.asarray(padded), reference, jnp.asarray(qlens),
@@ -328,13 +419,12 @@ def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
                    excl_lo=jnp.asarray(lo[idxs]),
                    excl_hi=jnp.asarray(hi[idxs]),
                    mesh=mesh, ref_axis=ref_axis, top_k=top_k,
-                   return_positions=return_positions, excl_zone=excl_zone,
-                   block_q=block_q, block_m=block_m)
-        dists, posns = res if wants_pair else (res, None)
-        for k, i in enumerate(idxs):
-            out[i] = dists[k]
-            if posns is not None:
-                pos[i] = posns[k]
-    if wants_pair:
-        return jnp.stack(out), jnp.stack(pos)
-    return jnp.stack(out)
+                   return_positions=return_positions,
+                   return_spans=return_spans, excl_zone=excl_zone,
+                   excl_mode=excl_mode, block_q=block_q, block_m=block_m)
+        res = res if isinstance(res, tuple) else (res,)
+        for t in range(n_out):
+            for k, i in enumerate(idxs):
+                outs[t][i] = res[t][k]
+    stacked = tuple(jnp.stack(o) for o in outs)
+    return stacked if n_out > 1 else stacked[0]

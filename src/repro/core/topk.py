@@ -1,24 +1,37 @@
 """Fixed-size top-K match heaps with exclusion-zone suppression.
 
 The search layer (``repro.search``) and the streaming sDTW paths report not
-just the best alignment distance but the K best *match end positions* — the
+just the best alignment distance but the K best *match spans* — the
 paper's actual workload (anomaly/motif search over ECG-class streams, §I,
-§V). A "heap" here is a pair of fixed-shape arrays
+§V) consumes the aligned event, not just a score. A "heap" here is a
+triple of fixed-shape arrays
 
-    (distances (k,), positions (k,))
+    (distances (k,), end_positions (k,), start_positions (k,))
 
-sorted ascending by distance, padded with ``(BIG, -1)`` — fixed shapes so
-the heap can ride a ``lax.scan`` carry (the chunk boundary-carry protocol)
-and a ``lax.ppermute`` (the sharded systolic pipeline) unchanged.
+sorted ascending by distance, padded with ``(BIG, -1, -1)`` — fixed shapes
+so the heap can ride a ``lax.scan`` carry (the chunk boundary-carry
+protocol) and a ``lax.ppermute`` (the sharded systolic pipeline) unchanged.
+Start positions are produced by the DP's start-pointer lane (see
+``repro.core.sdtw``): the row-0 reference column where the matched
+alignment began.
 
 Selection semantics — greedy best-first with an exclusion zone, the matrix-
 profile convention: repeatedly take the lowest remaining distance, then
-suppress every candidate whose end position is within ``excl_zone`` of it,
-so the K reported matches are non-trivially distinct (no stack of matches
-one sample apart). Ties break toward the lowest end position (``argmin`` is
-leftmost, and streamed chunks merge in reference order). Saturated
-candidates (distance ≥ BIG, e.g. the int32 ceiling) are never reported —
-they come back as ``(BIG, -1)`` padding.
+suppress every candidate "too close" to it, so the K reported matches are
+non-trivially distinct (no stack of matches one sample apart). Two
+suppression keys:
+
+  * end-distance (default): candidates with ``|end - picked_end| <=
+    excl_zone`` are removed — the classic matrix-profile rule.
+  * span overlap (``excl_span=True``): candidates whose span
+    ``[start, end]`` intersects the picked span widened by ``excl_zone``
+    on both sides are removed — two reported events never share reference
+    samples (``excl_zone=0`` is pure interval overlap).
+
+Ties break toward the lowest end position (``argmin`` is leftmost, and
+streamed chunks merge in reference order). Saturated candidates (distance
+≥ BIG, e.g. the int32 ceiling) are never reported — they come back as
+``(BIG, -1, -1)`` padding.
 
 The streamed top-1 is exact: it is the global ``min`` with the leftmost end
 index, bitwise-equal to ``engine.sdtw()``. For K > 1 the greedy suppression
@@ -34,39 +47,53 @@ from .distances import big
 
 
 def topk_init(nq: int, k: int, acc):
-    """Empty batched heap: ((nq, k) BIG distances, (nq, k) -1 positions)."""
+    """Empty batched heap: ((nq, k) BIG distances, (nq, k) -1 end
+    positions, (nq, k) -1 start positions)."""
     return (jnp.full((nq, k), big(acc), acc),
+            jnp.full((nq, k), -1, jnp.int32),
             jnp.full((nq, k), -1, jnp.int32))
 
 
-def topk_select(scores, positions, k: int, excl_zone: int):
+def topk_select(scores, positions, starts, k: int, excl_zone,
+                excl_span: bool = False):
     """K rounds of select-then-suppress over one candidate row.
 
     Args:
       scores:    (C,) candidate distances (BIG = absent/banned/saturated).
       positions: (C,) global end positions of the candidates.
+      starts:    (C,) global start positions (the DP start-pointer lane).
       k:         static heap size.
-      excl_zone: suppression radius — after a pick at position p, every
-                 candidate with |position - p| <= excl_zone is removed.
+      excl_zone: suppression radius — end-distance mode removes candidates
+                 with |position - picked| <= excl_zone; span mode widens
+                 the picked span by excl_zone on both sides first.
+      excl_span: suppress on span overlap instead of end distance.
 
-    Returns (k,) distances ascending + (k,) positions, (BIG, -1)-padded.
+    Returns (k,) distances ascending + (k,) ends + (k,) starts,
+    (BIG, -1, -1)-padded.
     """
     acc = scores.dtype
     BIG = big(acc)
-    out_d, out_p = [], []
+    out_d, out_p, out_s = [], [], []
     for _ in range(k):
         idx = jnp.argmin(scores)                    # leftmost on ties
         d = scores[idx]
         live = d < BIG
         p = jnp.where(live, positions[idx], -1)
-        suppress = live & (jnp.abs(positions - p) <= excl_zone)
+        s = jnp.where(live, starts[idx], -1)
+        if excl_span:
+            hit = (starts <= p + excl_zone) & (positions >= s - excl_zone)
+        else:
+            hit = jnp.abs(positions - p) <= excl_zone
+        suppress = live & hit
         scores = jnp.where(suppress, BIG, scores)
         out_d.append(jnp.where(live, d, BIG))
         out_p.append(p)
-    return jnp.stack(out_d), jnp.stack(out_p)
+        out_s.append(s)
+    return jnp.stack(out_d), jnp.stack(out_p), jnp.stack(out_s)
 
 
-def topk_merge(heap_d, heap_p, scores, positions, k: int, excl_zone: int):
+def topk_merge(heap_d, heap_p, heap_s, scores, positions, starts, k: int,
+               excl_zone, excl_span: bool = False):
     """Fold a fresh candidate row into a (k,) heap (one query).
 
     The heap's entries come first in the concatenation, so on exact ties
@@ -75,4 +102,5 @@ def topk_merge(heap_d, heap_p, scores, positions, k: int, excl_zone: int):
     """
     d = jnp.concatenate([heap_d, scores.astype(heap_d.dtype)])
     p = jnp.concatenate([heap_p, positions.astype(jnp.int32)])
-    return topk_select(d, p, k, excl_zone)
+    s = jnp.concatenate([heap_s, starts.astype(jnp.int32)])
+    return topk_select(d, p, s, k, excl_zone, excl_span)

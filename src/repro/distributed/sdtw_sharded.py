@@ -45,16 +45,19 @@ def default_mesh(axis: str = "ref") -> Mesh:
 
 @functools.lru_cache(maxsize=None)
 def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
-           n_micro: int, top_k, excl_zone):
+           n_micro: int, top_k, excl_zone, excl_span: bool,
+           track_start: bool):
     """Jitted shard-mapped pipeline for one (mesh, schedule) configuration.
 
-    With ``top_k`` set, the per-microbatch match heap (top-K distances and
-    global end positions, see ``repro.core.topk``) rides the systolic carry
-    exactly like the boundary column: each device folds the candidates of
-    its own reference segment into the heap it received from the left
-    neighbour, so the heap exiting the last device is already the merged
-    cross-shard top-K — the harvest is the one collective at the end, no
-    extra per-shard gather round.
+    With ``top_k`` set, the per-microbatch match heap (top-K distances,
+    global end positions, and start positions, see ``repro.core.topk``)
+    rides the systolic carry exactly like the boundary column — which
+    itself gains the start-pointer lane so spans survive the inter-device
+    hand-off: each device folds the candidates of its own reference
+    segment into the heap it received from the left neighbour, so the heap
+    exiting the last device is already the merged cross-shard top-K — the
+    harvest is the one collective at the end, no extra per-shard gather
+    round.
     """
     perm = [(i, i + 1) for i in range(ndev - 1)]
     ticks = n_micro + ndev - 1
@@ -67,7 +70,9 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
         j0 = d * seg
         mb, n = q_micro.shape[1], q_micro.shape[2]
         acc = accum_dtype(jnp.result_type(q_micro, r_shard))
-        fresh = sdtw_carry_init(mb, n, acc)
+        fresh = sdtw_carry_init(mb, n, acc,
+                                track_start=top_k is not None and
+                                track_start)
         if top_k is not None:
             fresh = fresh + topk_init(mb, top_k, acc)
 
@@ -87,8 +92,8 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
                       else jnp.full(ql.shape, excl_zone, jnp.int32))
                 cout = sdtw_segment_topk(q, r_shard[0], ql, cin, j0,
                                          m_total, metric, chunk, lo, hi,
-                                         top_k, ez)
-                emit = (cout[2], cout[3])           # heap: dists, positions
+                                         top_k, ez, excl_span, track_start)
+                emit = cout[-3:]                    # heap: d, ends, starts
             else:
                 cout = sdtw_segment(q, r_shard[0], ql, cin, j0, m_total,
                                     metric, chunk, lo, hi)
@@ -120,7 +125,8 @@ def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  excl_lo=None, excl_hi=None,
                  top_k: Optional[int] = None,
                  excl_zone: Optional[int] = None,
-                 return_positions: bool = False):
+                 return_positions: bool = False,
+                 return_spans: bool = False, excl_mode: str = "end"):
     """Batched sDTW with the reference sharded across ``mesh[axis]``.
 
     queries (nq, N), reference (M,) → (nq,) distances, matching the
@@ -130,7 +136,10 @@ def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
     heap travels with the microbatch through the device pipeline (the same
     ppermute that hands over the boundary column), so the cross-shard merge
     costs no extra collective; positions are global reference indices.
-    ``return_positions=True`` alone returns the top-1 pair.
+    ``return_positions=True`` alone returns the top-1 pair;
+    ``return_spans=True`` returns ``(dists, starts, ends)`` — the
+    start-pointer lane crosses devices inside the same ppermute'd carry.
+    ``excl_mode='span'`` keys heap suppression on span overlap.
     """
     if mesh is None:
         mesh = default_mesh(axis)
@@ -162,7 +171,7 @@ def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
     lo_pad = jnp.pad(excl_lo, (0, pad_q), constant_values=-1)
     hi_pad = jnp.pad(excl_hi, (0, pad_q), constant_values=-1)
 
-    wants_pair = top_k is not None or return_positions
+    wants_pair = top_k is not None or return_positions or return_spans
     kk = (1 if top_k is None else top_k) if wants_pair else None
     if excl_zone is not None and np.ndim(excl_zone) != 0:
         # The zone is baked into the cached pipeline build; per-query
@@ -174,19 +183,33 @@ def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
                          "chunked path")
     # zone is unused by the plain pipeline — pin it so non-top-K calls
     # share one _build cache entry. None = derive per query in the body
-    # (half the true query length, matching the single-device default).
-    zone = 0 if kk is None else (
-        None if excl_zone is None else int(excl_zone))
-    run = _build(mesh, axis, metric, chunk, ndev, n_micro, kk, zone)
+    # (half the true query length — or 0 in span mode — matching the
+    # single-device default).
+    if kk is None:
+        zone = 0
+    elif excl_zone is not None:
+        zone = int(excl_zone)
+    else:
+        zone = None if excl_mode == "end" else 0
+    # The start lane crosses the ppermute carry only when starts are
+    # consumed (spans requested or span-overlap suppression).
+    track = return_spans or excl_mode == "span"
+    run = _build(mesh, axis, metric, chunk, ndev, n_micro, kk, zone,
+                 excl_mode == "span", track)
     outs = run(r_pad, q_pad.reshape(n_micro, mb, n),
                ql_pad.reshape(n_micro, mb),
                lo_pad.reshape(n_micro, mb), hi_pad.reshape(n_micro, mb),
                jnp.int32(m))
     if not wants_pair:
         return outs.reshape(n_micro * mb)[:nq]
-    dists, poss = outs
+    dists, poss, starts = outs
     dists = dists.reshape(n_micro * mb, kk)[:nq]
     poss = poss.reshape(n_micro * mb, kk)[:nq]
-    if top_k is None:                       # return_positions only: top-1
+    starts = starts.reshape(n_micro * mb, kk)[:nq]
+    if top_k is None:                       # top-1, unstacked
+        if return_spans:
+            return dists[:, 0], starts[:, 0], poss[:, 0]
         return dists[:, 0], poss[:, 0]
+    if return_spans:
+        return dists, starts, poss
     return dists, poss

@@ -1,4 +1,3 @@
 from .ops import sdtw_pallas
-from .ref import sdtw_ref_jnp
 
-__all__ = ["sdtw_pallas", "sdtw_ref_jnp"]
+__all__ = ["sdtw_pallas"]

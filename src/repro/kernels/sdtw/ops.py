@@ -8,7 +8,9 @@ protocol), and the chunk-carry protocol: a call may start from a
 reference slice and return the carry for the next slice, so an arbitrarily
 long reference can be streamed through fixed-shape kernel launches — the
 same O(N) boundary-column hand-off MATSA performs between subarrays
-(§III-B), lifted to the call boundary."""
+(§III-B), lifted to the call boundary. In span mode the carry includes the
+DP start-pointer lane, so streamed slices report exact global match
+spans; the plain variant keeps the untaxed value+position lanes."""
 from __future__ import annotations
 
 import functools
@@ -17,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.distances import accum_dtype, big
+from repro.core.distances import INT_FAR, accum_dtype, big
 from .sdtw import _sdtw_kernel
 
 DEFAULT_BLOCK_Q = 8     # sublane-aligned query block
@@ -31,7 +33,8 @@ def _ceil_to(x: int, m: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("metric", "block_q", "block_m", "interpret",
-                     "return_carry", "return_positions"))
+                     "return_carry", "return_positions", "return_spans",
+                     "track_start"))
 def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 block_q: int = DEFAULT_BLOCK_Q,
                 block_m: int = DEFAULT_BLOCK_M,
@@ -39,28 +42,35 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 carry=None,
                 return_carry: bool = False,
                 ref_offset=0,
-                return_positions: bool = False):
+                return_positions: bool = False,
+                return_spans: bool = False,
+                track_start: bool = False):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
     VMEM working set per grid cell ≈ block_q·(2·block_m + 3·N) accumulator
-    words (queries + carry-in column + boundary column) — block shapes must
-    be chosen so this fits (~16 MB VMEM on v5e); the defaults handle
-    N ≤ 48K comfortably.
+    words plain, ≈ block_q·(3·block_m + 5·N) in span mode (the start lanes
+    are int32) — block shapes must be chosen so this fits (~16 MB VMEM on
+    v5e); the defaults handle N ≤ 48K (plain) / N ≤ 24K (spans)
+    comfortably.
 
     Chunk-carry protocol: ``carry`` is an optional
     ``(bcol (B, N), best (B,), pos (B,))`` triple — the DP boundary column
-    S[:, -1] of the reference slice processed so far, the running per-query
-    best, and the global end position of that best (the kernel tracks the
-    match end position in the carry so streamed slices report positions
-    exactly; a legacy ``(bcol, best)`` pair is accepted and seeds positions
-    at -1). Passing the carry returned by a previous call
-    (``return_carry=True``) continues the recurrence as if the two
-    reference slices had been one array. ``ref_offset`` is the global
-    column index of ``reference[0]`` (traced; no recompile per slice) so
-    reported positions are global.
+    S[:, -1] of the reference slice processed so far, the running
+    per-query best, and the global end position of that best (a legacy
+    ``(bcol, best)`` pair is accepted and seeds positions at -1). In span
+    mode (``return_spans=True``, or ``track_start=True`` to track without
+    changing the primary result, e.g. mid-stream) the carry is the
+    5-tuple ``(bcol, bstart, best, pos, start)`` with the boundary
+    column's start-pointer lane and the global start of the running best;
+    passing a 5-tuple carry selects span mode by itself. Passing the
+    carry returned by a previous call (``return_carry=True``) continues
+    the recurrence as if the two reference slices had been one array.
+    ``ref_offset`` is the global column index of ``reference[0]`` (traced;
+    no recompile per slice) so reported positions are global.
 
     With ``return_positions=True`` the primary result is a
-    ``(dists (B,), end_positions (B,))`` pair instead of ``dists``.
+    ``(dists (B,), end_positions (B,))`` pair; with ``return_spans=True``
+    it is a ``(dists, starts, ends)`` triple.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -69,21 +79,35 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     acc = accum_dtype(jnp.result_type(queries, reference))
     BIG = big(acc)
 
-    if qlens is None:
-        qlens = jnp.full((b,), n, jnp.int32)
-    if carry is None:
+    carry = tuple(carry) if carry is not None else ()
+    track = return_spans or track_start or len(carry) == 5
+    bstart = pos = start = None
+    if len(carry) == 5:
+        bcol, bstart, best, pos, start = carry
+    elif len(carry) == 3:               # (bcol, best, pos) triple
+        bcol, best, pos = carry
+    elif len(carry) == 2:               # legacy (bcol, best) pair
+        bcol, best = carry
+    elif len(carry) == 0:
         bcol = jnp.full((b, n), BIG, acc)
         best = jnp.full((b,), BIG, acc)
-        pos = jnp.full((b,), -1, jnp.int32)
     else:
-        if len(carry) == 2:                 # legacy (bcol, best) pair
-            bcol, best = carry
-            pos = jnp.full((b,), -1, jnp.int32)
-        else:
-            bcol, best, pos = carry
-        bcol = bcol.astype(acc)
-        best = best.astype(acc)
-        pos = pos.astype(jnp.int32)
+        raise ValueError(f"carry must have 2, 3 or 5 elements, got "
+                         f"{len(carry)}")
+    if pos is None:
+        pos = jnp.full((b,), -1, jnp.int32)
+    bcol = bcol.astype(acc)
+    best = best.astype(acc)
+    pos = pos.astype(jnp.int32)
+    if track:
+        if bstart is None:
+            bstart = jnp.full((b, n), INT_FAR, jnp.int32)
+        if start is None:
+            start = jnp.full((b,), -1, jnp.int32)
+        bstart = bstart.astype(jnp.int32)
+        start = start.astype(jnp.int32)
+    if qlens is None:
+        qlens = jnp.full((b,), n, jnp.int32)
     bp = _ceil_to(b, block_q)
     mp = _ceil_to(max(m, block_m), block_m)
 
@@ -97,36 +121,61 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     pos_pad = jnp.full((bp, 1), -1, jnp.int32).at[:b, 0].set(pos)
 
     grid = (bp // block_q, mp // block_m)
-    kernel = functools.partial(_sdtw_kernel, metric, n, block_m)
+    kernel = functools.partial(_sdtw_kernel, metric, n, block_m, track)
 
-    out, bound, pos_out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((1, block_m), lambda qb, t: (0, t)),
-            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
-            pl.BlockSpec((1, 1), lambda qb, t: (0, 0)),
-            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0)),
-            pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bp, 1), acc),
-            jax.ShapeDtypeStruct((bp, n), acc),
-            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
-        ],
-        interpret=interpret,
-    )(q_pad, r_pad, qlen_pad, rlen, off, bcol_pad, best_pad, pos_pad)
+    col_spec = pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0))
+    scalar_spec = pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0))
+    tile_spec = pl.BlockSpec((1, block_m), lambda qb, t: (0, t))
+    one_spec = pl.BlockSpec((1, 1), lambda qb, t: (0, 0))
+
+    inputs = [q_pad, r_pad, qlen_pad, rlen, off, bcol_pad]
+    in_specs = [col_spec, tile_spec, scalar_spec, one_spec, one_spec,
+                col_spec]
+    if track:
+        bstart_pad = jnp.full((bp, n), INT_FAR,
+                              jnp.int32).at[:b].set(bstart)
+        inputs += [bstart_pad]
+        in_specs += [col_spec]
+    inputs += [best_pad, pos_pad]
+    in_specs += [scalar_spec, scalar_spec]
+    if track:
+        start_pad = jnp.full((bp, 1), -1, jnp.int32).at[:b, 0].set(start)
+        inputs += [start_pad]
+        in_specs += [scalar_spec]
+
+    out_specs = [scalar_spec, col_spec]
+    out_shape = [jax.ShapeDtypeStruct((bp, 1), acc),
+                 jax.ShapeDtypeStruct((bp, n), acc)]
+    if track:
+        out_specs += [col_spec]
+        out_shape += [jax.ShapeDtypeStruct((bp, n), jnp.int32)]
+    out_specs += [scalar_spec]
+    out_shape += [jax.ShapeDtypeStruct((bp, 1), jnp.int32)]
+    if track:
+        out_specs += [scalar_spec]
+        out_shape += [jax.ShapeDtypeStruct((bp, 1), jnp.int32)]
+
+    outs = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*inputs)
+    if track:
+        out, bound, bound_start, pos_out, start_out = outs
+    else:
+        out, bound, pos_out = outs
     dist = out[:b, 0]
     end_pos = pos_out[:b, 0]
-    res = (dist, end_pos) if return_positions else dist
+    if return_spans:
+        res = (dist, start_out[:b, 0], end_pos)
+    elif return_positions:
+        res = (dist, end_pos)
+    else:
+        res = dist
     if return_carry:
-        return res, (bound[:b], dist, end_pos)
+        if track:
+            new_carry = (bound[:b], bound_start[:b], dist, end_pos,
+                         start_out[:b, 0])
+        else:
+            new_carry = (bound[:b], dist, end_pos)
+        return res, new_carry
     return res

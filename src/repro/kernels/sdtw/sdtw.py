@@ -19,6 +19,16 @@ Grid: (num_query_blocks, num_ref_tiles); the tile dimension is innermost and
 sequential, carrying the DP boundary column in VMEM scratch — the exact
 analogue of MATSA's inter-subarray pass gates (§III-B).
 
+Match spans (``track=True``, selected statically by the wrapper when the
+caller asks for spans): every DP lane becomes a lexicographic
+``(value, start)`` pair — ``start`` is the row-0 reference column where the
+cell's best path began, with value ties resolved toward the smaller start
+(``repro.core.distances.lex_min``, the single shared rule). The start lane
+rides the Hillis-Steele doubling, the boundary column, and the cross-call
+chunk carry, so streamed slices report exact global ``(start, end)``
+spans. The plain variant keeps PR 2's untaxed lanes (value + end position
+only) — distance/position callers pay nothing for the span feature.
+
 Accumulates in float32 or saturating int32 (see core.distances). Exclusion
 zones are not supported here (ops.py falls back to the rowscan path).
 """
@@ -28,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from repro.core.distances import big, sat_add
+from repro.core.distances import INT_FAR, big, lex_min, sat_add
 
 NEG_SHIFT_FILL_A = 0  # identity element of the tropical composition: f(x) = x
 
@@ -40,11 +50,14 @@ def _distance(q, r, metric):
     return d * d
 
 
-def _tropical_row_scan(a, u, big_val):
-    """Inclusive Hillis-Steele scan of f_j(x) = min(u_j, a_j + x) along lanes.
+def _tropical_row_scan(a, u, su, big_val):
+    """Inclusive Hillis-Steele scan of f_j(x) = min(u_j, a_j + x) along
+    lanes. With ``su`` (a start lane) the u-component carries it
+    lexicographically; with ``su=None`` it is the plain value scan.
 
-    Returns (a_pref, u_pref) with u_pref[j] = s_j assuming x_init folded in by
-    the caller via min(u_pref, a_pref + x_init). Identity = (a=0, u=BIG).
+    Returns (a_pref, u_pref, su_pref|None) with u_pref[j] = s_j assuming
+    x_init folded in by the caller via (lex)min(u_pref, a_pref + x_init).
+    Identity = (a=0, u=BIG, su=INT_FAR).
     """
     bm = a.shape[-1]
     shift = 1
@@ -52,45 +65,66 @@ def _tropical_row_scan(a, u, big_val):
         a_sh = jnp.pad(a, ((0, 0), (shift, 0)), constant_values=0)[:, :bm]
         u_sh = jnp.pad(u, ((0, 0), (shift, 0)),
                        constant_values=big_val)[:, :bm]
-        u = jnp.minimum(u, sat_add(a, u_sh))
+        if su is None:
+            u = jnp.minimum(u, sat_add(a, u_sh))
+        else:
+            su_sh = jnp.pad(su, ((0, 0), (shift, 0)),
+                            constant_values=INT_FAR)[:, :bm]
+            u, su = lex_min(u, su, sat_add(a, u_sh), su_sh)
         a = sat_add(a, a_sh)
         shift *= 2
-    return a, u
+    return a, u, su
 
 
-def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
-                 off_ref, bcol_in_ref, best_in_ref, pos_in_ref, out_ref,
-                 bound_ref, pos_ref):
+def _sdtw_kernel(metric, n, block_m, track, *refs):
     """One (query_block, ref_tile) cell of the grid.
 
-    q_ref:      (block_q, N)   queries (VMEM)
-    r_ref:      (1, block_m)   reference tile (VMEM)
-    qlen_ref:   (block_q, 1)   true query lengths
-    rlen_ref:   (1, 1)         true reference length
-    off_ref:    (1, 1)         global column offset of this reference slice
-                               (chunk-carry streaming) — reported match end
-                               positions are ``off + local column``
-    bcol_in_ref:(block_q, N)   carry in: boundary column entering this call
-                               (BIG for a fresh start)
-    best_in_ref:(block_q, 1)   carry in: running per-query best
-    pos_in_ref: (block_q, 1)   carry in: end position of that best (-1 for
-                               a fresh start)
-    out_ref:    (block_q, 1)   running per-query best (min over last valid row)
-    bound_ref:  (block_q, N)   output: boundary column — seeded from the
-                               previous *reference slice* (chunk-carry
-                               protocol), threaded between tiles, and
-                               returned as the carry for the next slice
-    pos_ref:    (block_q, 1)   output: global end position of the best match
-                               (leftmost column attaining it); updated only
-                               on strict improvement so earlier slices/tiles
-                               win ties, matching the rowscan's leftmost
-                               ``argmin``
+    Refs, in order (``track=False`` omits every *start* ref — the lanes
+    marked ⊕ exist only in the span variant):
+
+    q_ref:       (block_q, N)   queries (VMEM)
+    r_ref:       (1, block_m)   reference tile (VMEM)
+    qlen_ref:    (block_q, 1)   true query lengths
+    rlen_ref:    (1, 1)         true reference length
+    off_ref:     (1, 1)         global column offset of this reference slice
+                                (chunk-carry streaming) — reported match
+                                positions are ``off + local column``
+    bcol_in_ref: (block_q, N)   carry in: boundary column entering this call
+                                (BIG for a fresh start)
+    bstart_in_ref:(block_q, N) ⊕ carry in: start lane of that boundary
+                                column (INT_FAR for a fresh start)
+    best_in_ref: (block_q, 1)   carry in: running per-query best
+    pos_in_ref:  (block_q, 1)   carry in: end position of that best (-1 for
+                                a fresh start)
+    start_in_ref:(block_q, 1) ⊕ carry in: start position of that best (-1)
+    out_ref:     (block_q, 1)   running per-query best (min over last valid
+                                row)
+    bound_ref:   (block_q, N)   output: boundary column — seeded from the
+                                previous *reference slice* (chunk-carry
+                                protocol), threaded between tiles, and
+                                returned as the carry for the next slice
+    bound_start_ref:(block_q,N)⊕ output: start lane of the boundary column
+    pos_ref:     (block_q, 1)   output: global end position of the best
+                                match (leftmost column attaining it);
+                                updated only on strict improvement so
+                                earlier slices/tiles win ties, matching the
+                                rowscan's leftmost ``argmin``
+    start_ref:   (block_q, 1) ⊕ output: global start position of that match
+                                (the smallest row-0 column among its
+                                minimum-cost alignments)
     """
+    if track:
+        (q_ref, r_ref, qlen_ref, rlen_ref, off_ref, bcol_in_ref,
+         bstart_in_ref, best_in_ref, pos_in_ref, start_in_ref, out_ref,
+         bound_ref, bound_start_ref, pos_ref, start_ref) = refs
+    else:
+        (q_ref, r_ref, qlen_ref, rlen_ref, off_ref, bcol_in_ref,
+         best_in_ref, pos_in_ref, out_ref, bound_ref, pos_ref) = refs
     t = pl.program_id(1)
     acc = out_ref.dtype
     BIG = big(acc)
     bq = q_ref.shape[0]
-    INT_FAR = jnp.iinfo(jnp.int32).max
+    INT_FAR_ = jnp.int32(INT_FAR)
 
     r = r_ref[...].astype(acc)                       # (1, bm)
     qlen = qlen_ref[...].astype(jnp.int32)           # (bq, 1)
@@ -104,12 +138,16 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         out_ref[...] = best_in_ref[...]
         bound_ref[...] = bcol_in_ref[...]
         pos_ref[...] = pos_in_ref[...]
+        if track:
+            bound_start_ref[...] = bstart_in_ref[...]
+            start_ref[...] = start_in_ref[...]
 
     best0 = out_ref[...]                             # (bq, 1)
     pos0 = pos_ref[...]                              # (bq, 1)
+    sstart0 = start_ref[...] if track else pos0      # (bq, 1)
 
     def row_body(i, carry):
-        prev, b_im1, best, pos = carry               # (bq,bm), (bq,1) ×3
+        prev, pstart, b_im1, bs_im1, best, pos, sbest = carry
         qi = jax.lax.dynamic_slice_in_dim(q_ref[...], i, 1, axis=1).astype(acc)
         d = _distance(qi, r, metric)                 # (bq, bm) broadcast
         d = jnp.where(col_ok, d, BIG)
@@ -118,29 +156,54 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         b_row = jax.lax.dynamic_slice_in_dim(bound_ref[...], i, 1, axis=1)
 
         # prev shifted right by one lane; lane 0 takes the diagonal boundary.
+        lane0 = lax.broadcasted_iota(jnp.int32, prev.shape, 1) == 0
         prev_sh = jnp.pad(prev, ((0, 0), (1, 0)),
                           constant_values=0)[:, :block_m]
-        prev_sh = jnp.where(
-            lax.broadcasted_iota(jnp.int32, prev.shape, 1) == 0, b_im1, prev_sh)
-        m = jnp.minimum(prev_sh, prev)               # min(S[i-1,j-1], S[i-1,j])
+        prev_sh = jnp.where(lane0, b_im1, prev_sh)
+        if track:
+            bs_row = jax.lax.dynamic_slice_in_dim(bound_start_ref[...], i,
+                                                  1, axis=1)
+            pstart_sh = jnp.pad(pstart, ((0, 0), (1, 0)),
+                                constant_values=INT_FAR)[:, :block_m]
+            pstart_sh = jnp.where(lane0, bs_im1, pstart_sh)
+            # lexmin(S[i-1,j-1], S[i-1,j]) with its start lane
+            m, ms = lex_min(prev_sh, pstart_sh, prev, pstart)
+        else:
+            bs_row = bs_im1
+            m, ms = jnp.minimum(prev_sh, prev), None
 
         u = sat_add(d, m)
         a = d
-        a_p, u_p = _tropical_row_scan(a, u, BIG)
-        s_rec = jnp.minimum(u_p, sat_add(a_p, b_row))
+        a_p, u_p, su_p = _tropical_row_scan(a, u, ms, BIG)
+        if track:
+            s_rec, ss_rec = lex_min(u_p, su_p, sat_add(a_p, b_row), bs_row)
+            gstart = jnp.broadcast_to(off + j_global, (bq, block_m))
+            sstart = jnp.where(i == 0, gstart, ss_rec)
+        else:
+            s_rec = jnp.minimum(u_p, sat_add(a_p, b_row))
+            sstart = pstart                          # unused dummy
         s = jnp.where(i == 0, d, s_rec)              # free-start row
         s = jnp.where(col_ok, s, BIG)
+        if track:
+            sstart = jnp.where(col_ok, sstart, INT_FAR_)
 
         # Record min over the last valid row of each query, plus the
         # leftmost global column attaining it (strict < so earlier
-        # tiles/slices keep ties).
+        # tiles/slices keep ties) and — in span mode — that cell's start.
         row_min = jnp.min(s, axis=1, keepdims=True)
         at_last = i == qlen - 1
-        cand = jnp.min(jnp.where(s == row_min,
+        is_min = s == row_min
+        cand = jnp.min(jnp.where(is_min,
                                  jnp.broadcast_to(off + j_global, s.shape),
-                                 INT_FAR), axis=1, keepdims=True)
-        pos = jnp.where(at_last & (row_min < best), cand.astype(jnp.int32),
-                        pos)
+                                 INT_FAR_), axis=1, keepdims=True)
+        improve = at_last & (row_min < best)
+        pos = jnp.where(improve, cand.astype(jnp.int32), pos)
+        if track:
+            at_cand = is_min & (jnp.broadcast_to(off + j_global, s.shape)
+                                == cand)
+            cand_start = jnp.min(jnp.where(at_cand, sstart, INT_FAR_),
+                                 axis=1, keepdims=True)
+            sbest = jnp.where(improve, cand_start.astype(jnp.int32), sbest)
         best = jnp.where(at_last, jnp.minimum(best, row_min), best)
 
         # Persist this tile's last *valid* column as the next boundary (the
@@ -148,15 +211,26 @@ def _sdtw_kernel(metric, n, block_m, q_ref, r_ref, qlen_ref, rlen_ref,
         # cross-call chaining to be exact); a tile past rlen keeps b_row.
         last_local = jnp.clip(rlen - 1 - t * block_m, 0, block_m - 1)
         sel = lax.broadcasted_iota(jnp.int32, s.shape, 1) == last_local
+        in_tile = t * block_m < rlen
         new_b = jnp.min(jnp.where(sel, s, BIG), axis=1, keepdims=True)
-        new_b = jnp.where(t * block_m < rlen, new_b, b_row)
-        bound_new = jax.lax.dynamic_update_slice_in_dim(
+        new_b = jnp.where(in_tile, new_b, b_row)
+        bound_ref[...] = jax.lax.dynamic_update_slice_in_dim(
             bound_ref[...], new_b, i, axis=1)
-        bound_ref[...] = bound_new
-        return s, b_row, best, pos
+        if track:
+            new_bs = jnp.min(jnp.where(sel, sstart, INT_FAR_), axis=1,
+                             keepdims=True)
+            new_bs = jnp.where(in_tile, new_bs, bs_row)
+            bound_start_ref[...] = jax.lax.dynamic_update_slice_in_dim(
+                bound_start_ref[...], new_bs, i, axis=1)
+        return s, sstart, b_row, bs_row, best, pos, sbest
 
     prev0 = jnp.full((bq, block_m), BIG, acc)
+    pstart0 = jnp.full((bq, block_m), INT_FAR_, jnp.int32)
     b0 = jnp.full((bq, 1), BIG, acc)
-    _, _, best, pos = lax.fori_loop(0, n, row_body, (prev0, b0, best0, pos0))
+    bs0 = jnp.full((bq, 1), INT_FAR_, jnp.int32)
+    _, _, _, _, best, pos, sbest = lax.fori_loop(
+        0, n, row_body, (prev0, pstart0, b0, bs0, best0, pos0, sstart0))
     out_ref[...] = best
     pos_ref[...] = pos
+    if track:
+        start_ref[...] = sbest

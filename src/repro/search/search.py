@@ -20,8 +20,9 @@ Pruning semantics — two deviations from the exact streamed path:
   * **Span cap**: a match whose alignment path covers more than
     ``span_cap`` reference columns (default 2N; raise it or pass
     ``prune=False`` to lift) may be missed or scored from truncated
-    context. Under the cap, the top-1 *distance* is exactly
-    ``engine.sdtw()``'s answer (bitwise for int32).
+    context — reported *starts* inherit the same bound (a start earlier
+    than the halo window cannot be observed). Under the cap, the top-1
+    *distance* is exactly ``engine.sdtw()``'s answer (bitwise for int32).
   * **Greedy order**: surviving chunks are visited in bound order, not
     reference order, so for k > 1 the exclusion-zone suppression can
     resolve differently than the streamed path — the reported set beyond
@@ -68,6 +69,7 @@ class SearchResult:
     distances: object           # (nq, k) best-first; BIG-padded
     positions: object           # (nq, k) global end indices; -1-padded
     chunk: int                  # pruning tile size used
+    starts: object = None       # (nq, k) global start indices; -1-padded
     chunks_total: int = 0      # candidate chunks across all buckets
     chunks_pruned_kim: int = 0    # skipped on the constant-time bound
     chunks_pruned_keogh: int = 0  # skipped on the envelope bound
@@ -76,6 +78,11 @@ class SearchResult:
     @property
     def chunks_pruned(self) -> int:
         return self.chunks_pruned_kim + self.chunks_pruned_keogh
+
+    @property
+    def spans(self):
+        """(nq, k, 2) stacked (start, end) spans."""
+        return jnp.stack([self.starts, self.positions], axis=-1)
 
 
 def _pow2_at_least(x: int) -> int:
@@ -91,53 +98,61 @@ def default_chunk(m: int, n: int) -> int:
                    _pow2_at_least(max(n, m // 8))))
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "chunk", "halo", "k"))
-def _pruned_chunk_step(queries, qlens, seg, heap_d, heap_p, j0, m_total,
-                       excl_lo, excl_hi, excl_zone, *, metric, chunk, halo,
-                       k):
+@functools.partial(jax.jit, static_argnames=("metric", "chunk", "halo", "k",
+                                             "excl_span"))
+def _pruned_chunk_step(queries, qlens, seg, heap_d, heap_p, heap_s, j0,
+                       m_total, excl_lo, excl_hi, excl_zone, *, metric,
+                       chunk, halo, k, excl_span):
     """Score one surviving chunk and fold its candidates into the heap.
 
     ``seg`` is the chunk plus ``halo`` left-context chunks; the DP runs
     from a fresh carry at the group start (columns before the reference,
     j < 0, are masked), and only the *target* chunk's last-row candidates
-    are harvested — the halo exists purely to warm the boundary carry so
-    any match with span ≤ halo·chunk is scored with full context.
+    are harvested — the halo exists purely to warm the boundary carry
+    (value *and* start-pointer lanes, so candidate spans beginning inside
+    the halo are exact) so any match with span ≤ halo·chunk is scored
+    with full context.
     """
     nq, n = queries.shape
     acc = accum_dtype(jnp.result_type(queries, seg))
-    carry = sdtw_carry_init(nq, n, acc)
+    carry = sdtw_carry_init(nq, n, acc, track_start=True)
     if halo:
         carry = sdtw_segment(queries, seg[:halo * chunk], qlens, carry, j0,
                              m_total, metric, chunk, excl_lo, excl_hi)
-    carry = carry + (heap_d.astype(acc), heap_p)
-    _, _, heap_d, heap_p = sdtw_chunk_batch_topk(
+    carry = carry + (heap_d.astype(acc), heap_p, heap_s)
+    _, _, _, heap_d, heap_p, heap_s = sdtw_chunk_batch_topk(
         queries, seg[halo * chunk:], qlens, carry, j0 + halo * chunk,
-        m_total, metric, excl_lo, excl_hi, k, excl_zone)   # (nq,) zone
-    return heap_d, heap_p
+        m_total, metric, excl_lo, excl_hi, k, excl_zone,   # (nq,) zone
+        excl_span, track_start=True)
+    return heap_d, heap_p, heap_s
 
 
 def _search_padded(queries, reference, qlens, *, k, metric, chunk, prune,
-                   halo, excl_zone, excl_lo, excl_hi, env):
+                   halo, excl_zone, excl_mode, excl_lo, excl_hi, env):
     """Pruned search for one padded (nq, N) bucket. Returns
-    (dists, positions, stats_tuple)."""
+    (dists, positions, starts, stats_tuple)."""
     nq, n = queries.shape
     m = reference.shape[0]
     acc = accum_dtype(jnp.result_type(queries, reference))
     n_chunks = -(-m // chunk)
 
     if not prune:
-        d, p = engine.sdtw(queries, reference, qlens, metric=metric,
-                           impl="chunked", chunk=chunk, top_k=k,
-                           excl_zone=excl_zone, excl_lo=excl_lo,
-                           excl_hi=excl_hi)
-        return d, p, (n_chunks, 0, 0, n_chunks)
+        d, s, p = engine.sdtw(queries, reference, qlens, metric=metric,
+                              impl="chunked", chunk=chunk, top_k=k,
+                              excl_zone=excl_zone, excl_lo=excl_lo,
+                              excl_hi=excl_hi, excl_mode=excl_mode,
+                              return_spans=True)
+        return d, p, s, (n_chunks, 0, 0, n_chunks)
 
     if qlens is None:
         qlens = jnp.full((nq,), n, jnp.int32)
     excl_lo = jnp.asarray(engine._normalize_excl(excl_lo, nq))
     excl_hi = jnp.asarray(engine._normalize_excl(excl_hi, nq))
-    zone = (default_excl_zone(qlens) if excl_zone is None
-            else jnp.full((nq,), int(excl_zone), jnp.int32))
+    if excl_zone is None:
+        zone = (default_excl_zone(qlens) if excl_mode == "end"
+                else jnp.zeros((nq,), jnp.int32))
+    else:
+        zone = jnp.full((nq,), int(excl_zone), jnp.int32)
 
     mins, maxs = env
     kim, keogh = lb_cascade(queries, qlens, mins, maxs, halo, metric)
@@ -150,7 +165,7 @@ def _search_padded(queries, reference, qlens, *, k, metric, chunk, prune,
     r_pad = jnp.pad(reference, (0, n_chunks * chunk - m))
     r_ext = jnp.pad(r_pad, (halo * chunk, 0))
 
-    heap_d, heap_p = topk_init(nq, k, acc)
+    heap_d, heap_p, heap_s = topk_init(nq, k, acc)
     pruned_kim = pruned_keogh = processed = 0
     # Most promising chunks first: thresholds tighten fastest, later
     # chunks die on the cheap bound. The k-th-best threshold only moves
@@ -167,18 +182,21 @@ def _search_padded(queries, reference, qlens, *, k, metric, chunk, prune,
             continue
         processed += 1
         group = r_ext[c * chunk:(c + halo + 1) * chunk]  # static shape ∀ c
-        heap_d, heap_p = _pruned_chunk_step(
-            queries, qlens, group, heap_d, heap_p,
+        heap_d, heap_p, heap_s = _pruned_chunk_step(
+            queries, qlens, group, heap_d, heap_p, heap_s,
             jnp.int32((c - halo) * chunk), jnp.int32(m), excl_lo, excl_hi,
-            zone, metric=metric, chunk=chunk, halo=halo, k=k)
+            zone, metric=metric, chunk=chunk, halo=halo, k=k,
+            excl_span=(excl_mode == "span"))
         thr = np.asarray(heap_d[:, -1], np.float64)
-    return heap_d, heap_p, (n_chunks, pruned_kim, pruned_keogh, processed)
+    return heap_d, heap_p, heap_s, (n_chunks, pruned_kim, pruned_keogh,
+                                    processed)
 
 
 def search_topk(queries, reference, k: int = 1, *, qlens=None,
                 metric: str = "abs_diff", chunk: Optional[int] = None,
                 prune: bool = True, span_cap: Optional[int] = None,
-                excl_zone: Optional[int] = None, normalize: bool = False,
+                excl_zone: Optional[int] = None, excl_mode: str = "end",
+                normalize: bool = False,
                 excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
                 cache: Optional[cache_mod.EnvelopeCache] = None,
                 ref_key=None) -> SearchResult:
@@ -195,7 +213,13 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
       span_cap:  max alignment span (columns) the pruned path scores with
                  full context; default ``2 * N``.
       excl_zone: suppression radius between reported matches (default:
-                 half of each query's true length).
+                 half of each query's true length — or 0 with
+                 ``excl_mode='span'``).
+      excl_mode: 'end' suppresses matches whose ends are within
+                 ``excl_zone`` (matrix-profile convention); 'span'
+                 suppresses matches whose ``[start, end]`` spans overlap
+                 (widened by ``excl_zone``) — reported events share no
+                 reference samples.
       normalize: z-normalize reference (globally) and queries (per true
                  length) first; output distances are then in z-space.
       excl_lo/excl_hi: banned reference column range per query.
@@ -206,12 +230,18 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
                  (default: the module-level ``DEFAULT_CACHE``).
       ref_key:   stable cache key for the reference (recommended).
 
-    Returns a ``SearchResult``; distances/positions are (nq, k) (or (k,)
-    for a single 1-D query), best first, ``(BIG, -1)``-padded when fewer
-    than k sufficiently-distinct matches exist.
+    Returns a ``SearchResult``; distances/positions/starts are (nq, k)
+    (or (k,) for a single 1-D query), best first, ``(BIG, -1, -1)``-padded
+    when fewer than k sufficiently-distinct matches exist. ``starts`` is
+    the DP start-pointer lane: the row-0 reference column where each
+    match's alignment begins, so ``(starts[i, j], positions[i, j])`` is
+    the j-th best matched span of query i.
     """
     if not isinstance(k, int) or k < 1:
         raise ValueError(f"k must be a positive int, got {k!r}")
+    if excl_mode not in ("end", "span"):
+        raise ValueError(f"excl_mode must be 'end' or 'span', got "
+                         f"{excl_mode!r}")
     if mesh is not None and prune:
         raise ValueError("mesh= runs the sharded engine over every chunk; "
                          "pass prune=False explicitly (the LB cascade is "
@@ -243,6 +273,7 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
 
     out_d = [None] * nq
     out_p = [None] * nq
+    out_s = [None] * nq
     totals = [0, 0, 0, 0]
     used_chunk = None
     for blen, idxs in buckets.items():
@@ -266,10 +297,11 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
         halo = max(1, -(-cap // c))
 
         if mesh is not None:
-            d, p = engine.sdtw(bq, reference, bql, metric=metric, mesh=mesh,
-                               ref_axis=ref_axis, chunk=c, top_k=k,
-                               excl_zone=excl_zone, excl_lo=blo,
-                               excl_hi=bhi)
+            d, s, p = engine.sdtw(bq, reference, bql, metric=metric,
+                                  mesh=mesh, ref_axis=ref_axis, chunk=c,
+                                  top_k=k, excl_zone=excl_zone,
+                                  excl_mode=excl_mode, excl_lo=blo,
+                                  excl_hi=bhi, return_spans=True)
             stats = (-(-m // c), 0, 0, -(-m // c))
         else:
             # The cached envelope belongs to the array actually searched —
@@ -279,23 +311,27 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
                        else (ref_key, bool(normalize)))
             env = cache.envelope(reference, c, key=env_key) if prune \
                 else None
-            d, p, stats = _search_padded(
+            d, p, s, stats = _search_padded(
                 bq, reference, bql, k=k, metric=metric, chunk=c,
-                prune=prune, halo=halo, excl_zone=excl_zone, excl_lo=blo,
-                excl_hi=bhi, env=env)
+                prune=prune, halo=halo, excl_zone=excl_zone,
+                excl_mode=excl_mode, excl_lo=blo, excl_hi=bhi, env=env)
         for t in range(4):
             totals[t] += stats[t]
         d = np.asarray(d)
         p = np.asarray(p)
+        s = np.asarray(s)
         for j, i in enumerate(idxs):
             out_d[i] = d[j]
             out_p[i] = p[j]
+            out_s[i] = s[j]
 
     dists = jnp.asarray(np.stack(out_d))
     poss = jnp.asarray(np.stack(out_p))
+    starts = jnp.asarray(np.stack(out_s))
     if not ragged and single:
-        dists, poss = dists[0], poss[0]
-    return SearchResult(distances=dists, positions=poss, chunk=used_chunk,
+        dists, poss, starts = dists[0], poss[0], starts[0]
+    return SearchResult(distances=dists, positions=poss, starts=starts,
+                        chunk=used_chunk,
                         chunks_total=totals[0], chunks_pruned_kim=totals[1],
                         chunks_pruned_keogh=totals[2],
                         chunks_processed=totals[3])

@@ -8,6 +8,11 @@ Asserts:
   4. compressed_psum mean ≈ true mean within int8 quantisation error
   5. multi-pod mesh (2,2,2) train_step compiles & runs
   6. elastic checkpoint restore onto a different mesh
+  7. GPipe pipeline == sequential execution
+  8. sharded sDTW (ppermute boundary-column exchange) == numpy oracle
+  9. sharded top-K heap == single-process streamer bitwise
+  10. sharded spans + top-K span heap (start-pointer lane through the
+      ppermute carry) == single-process bitwise, both suppression modes
 """
 import os
 
@@ -198,5 +203,28 @@ np.testing.assert_array_equal(np.asarray(d9), np.asarray(cd)[:, 0])
 np.testing.assert_array_equal(np.asarray(p9), np.asarray(cp)[:, 0])
 print("9 OK: sharded top-K heap (carry-merged across shards) matches "
       "single-process streamer bitwise")
+
+# --- 10. sharded spans (start-pointer lane crosses the ppermute carry) ----
+qs10 = rng8.integers(-8, 8, (8, 6)).astype(np.int32)   # tie-heavy range
+r10 = rng8.integers(-8, 8, 97).astype(np.int32)
+sd10, ss10, se10 = engine_sdtw(jnp.asarray(qs10), jnp.asarray(r10),
+                               mesh=ref_mesh, chunk=8, return_spans=True)
+cd10, cs10, ce10 = sdtw_chunked(jnp.asarray(qs10), jnp.asarray(r10),
+                                chunk=8, return_spans=True)
+np.testing.assert_array_equal(np.asarray(sd10), np.asarray(cd10))
+np.testing.assert_array_equal(np.asarray(ss10), np.asarray(cs10))
+np.testing.assert_array_equal(np.asarray(se10), np.asarray(ce10))
+# Top-K spans, both suppression modes, sharded == single-process bitwise.
+for mode in ("end", "span"):
+    tk_s = engine_sdtw(jnp.asarray(qs10), jnp.asarray(r10), mesh=ref_mesh,
+                       chunk=8, top_k=3, excl_zone=4, excl_mode=mode,
+                       return_spans=True)
+    tk_c = sdtw_chunked(jnp.asarray(qs10), jnp.asarray(r10), chunk=8,
+                        top_k=3, excl_zone=4, excl_mode=mode,
+                        return_spans=True)
+    for a, b in zip(tk_s, tk_c):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("10 OK: sharded spans + top-K span heap (start lane through the "
+      "ppermute carry) match single-process bitwise")
 
 print("DISTRIBUTED_ALL_OK")

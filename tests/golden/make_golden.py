@@ -1,0 +1,54 @@
+"""Golden span/distance fixture generator.
+
+``compute()`` produces every fixture array from a fixed seed; running this
+file writes them to ``sdtw_spans_v1.npz``. The committed ``.npz`` is
+asserted *bitwise* in CI (``test_spans_paths.py::test_golden_spans_bitwise``)
+so silent numeric drift across jax/XLA upgrades — the class of breakage
+PR 1 repaired — fails loudly instead of shipping. Regenerate only when the
+engine's semantics intentionally change, and say why in the commit.
+
+Run:  PYTHONPATH=src python tests/golden/make_golden.py
+"""
+import pathlib
+
+import numpy as np
+
+SEED = 20260731
+OUT = pathlib.Path(__file__).parent / "sdtw_spans_v1.npz"
+
+
+def compute():
+    import jax.numpy as jnp
+
+    from repro.core import sdtw
+
+    rng = np.random.default_rng(SEED)
+    out = {}
+    for dtype, tag in ((np.int32, "i32"), (np.float32, "f32")):
+        q = rng.integers(-40, 40, (4, 10)).astype(dtype)
+        r = rng.integers(-40, 40, 257).astype(dtype)
+        out[f"{tag}_queries"] = q
+        out[f"{tag}_reference"] = r
+        for metric in ("abs_diff", "square_diff"):
+            d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), metric=metric,
+                           impl="chunked", chunk=32, return_spans=True)
+            out[f"{tag}_{metric}_dists"] = np.asarray(d)
+            out[f"{tag}_{metric}_starts"] = np.asarray(s)
+            out[f"{tag}_{metric}_ends"] = np.asarray(e)
+            dr, sr, er = sdtw(jnp.asarray(q), jnp.asarray(r), metric=metric,
+                              impl="rowscan", return_spans=True)
+            out[f"{tag}_{metric}_rowscan_dists"] = np.asarray(dr)
+            out[f"{tag}_{metric}_rowscan_starts"] = np.asarray(sr)
+            out[f"{tag}_{metric}_rowscan_ends"] = np.asarray(er)
+        dk, sk, ek = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=3,
+                          excl_zone=5, return_spans=True)
+        out[f"{tag}_topk_dists"] = np.asarray(dk)
+        out[f"{tag}_topk_starts"] = np.asarray(sk)
+        out[f"{tag}_topk_ends"] = np.asarray(ek)
+    return out
+
+
+if __name__ == "__main__":
+    arrays = compute()
+    np.savez(OUT, **arrays)
+    print(f"wrote {OUT} ({len(arrays)} arrays)")

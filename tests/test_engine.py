@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import choose_impl, sdtw, sdtw_batch, sdtw_chunked, sdtw_ref
+from oracle import sdtw_end, sdtw_matrix, sdtw_ref
+
+from repro.core import choose_impl, sdtw, sdtw_batch, sdtw_chunked
 from repro.core.distances import INT_BIG
 from repro.core.engine import CHUNK_THRESHOLD, MIN_BUCKET, bucketize
 from repro.kernels.sdtw import sdtw_pallas
@@ -238,9 +240,7 @@ def test_forced_impl_contradictions_rejected():
 # Top-K / match-position modes
 # ---------------------------------------------------------------------------
 
-def _pos_oracle(q, r, metric="abs_diff"):
-    from repro.core import sdtw_matrix
-    return int(np.argmin(sdtw_matrix(q, r, metric)[-1]))
+_pos_oracle = sdtw_end
 
 
 def test_return_positions_all_impls_agree(rng):
@@ -261,7 +261,6 @@ def test_return_positions_all_impls_agree(rng):
 def test_topk_auto_routes_to_chunked_and_matches_greedy(rng):
     """engine.sdtw(top_k=) == greedy suppression on the oracle last row;
     top-1 column equals the plain-call distance bitwise."""
-    from repro.core import sdtw_matrix
     q = rng.integers(-40, 40, (3, 8)).astype(np.int32)
     r = rng.integers(-40, 40, 120).astype(np.int32)
     k, zone = 3, 5

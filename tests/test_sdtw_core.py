@@ -7,9 +7,10 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (matsa, sdtw_batch, sdtw_ref, sdtw_rowscan,
-                        sdtw_wavefront, self_join_windows)
-from repro.core.sdtw_ref import dtw_ref, sdtw_matrix
+from oracle import dtw_ref, sdtw_matrix, sdtw_ref
+
+from repro.core import (matsa, sdtw_batch, sdtw_rowscan, sdtw_wavefront,
+                        self_join_windows)
 
 IMPLS = {
     "rowscan": lambda q, r, **kw: sdtw_rowscan(jnp.asarray(q), jnp.asarray(r), **kw),

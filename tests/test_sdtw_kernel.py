@@ -1,5 +1,4 @@
-"""Pallas sDTW kernel: interpret-mode allclose sweeps vs the pure-jnp oracle
-(which is itself cross-checked against the numpy oracle here)."""
+"""Pallas sDTW kernel: interpret-mode allclose sweeps vs the test oracle."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,8 +7,9 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.sdtw_ref import sdtw_ref
-from repro.kernels.sdtw import sdtw_pallas, sdtw_ref_jnp
+from oracle import sdtw_ref
+
+from repro.kernels.sdtw import sdtw_pallas
 
 SHAPES = [
     # (B, N, M, block_q, block_m) — covers single/multi tile, odd sizes,
@@ -32,9 +32,6 @@ def test_kernel_shape_dtype_sweep(b, n, m, bq, bm, metric, dtype, rng):
                                  metric=metric, block_q=bq, block_m=bm))
     want = np.array([sdtw_ref(q[i], r, metric) for i in range(b)])
     np.testing.assert_allclose(got, want, rtol=1e-5)
-    jref = np.asarray(sdtw_ref_jnp(jnp.asarray(q), jnp.asarray(r),
-                                   metric=metric))
-    np.testing.assert_allclose(jref, want, rtol=1e-5)
 
 
 def test_kernel_bf16_inputs(rng):

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import sdtw, sdtw_matrix, sdtw_ref
-from repro.core.distances import INT_BIG
-from repro.core.sdtw_ref import dtw_ref
+from oracle import dtw_ref, greedy_topk, sdtw_matrix, sdtw_ref
+
+from repro.core import sdtw
 from repro.core.topk import topk_init, topk_merge, topk_select
 from repro.search import (EnvelopeCache, chunk_envelope, lb_cascade,
                           search_topk, windowed_envelope, znorm_padded)
@@ -20,22 +20,6 @@ def heterogeneous_reference(rng, m, seg):
     levels = rng.integers(-1500, 1500, -(-m // seg))
     return np.concatenate([
         lvl + rng.normal(0, 40, seg) for lvl in levels])[:m].astype(np.int32)
-
-
-def greedy_topk_oracle(last_row, k, zone):
-    """Best-first selection with exclusion suppression on the full DP last
-    row (float64) — the semantics `repro.core.topk` implements streamed."""
-    row = last_row.astype(np.float64).copy()
-    out = []
-    for _ in range(k):
-        j = int(np.argmin(row))
-        v = row[j]
-        if v >= INT_BIG or not np.isfinite(v):
-            out.append((np.inf, -1))
-            continue
-        out.append((v, j))
-        row[np.abs(np.arange(len(row)) - j) <= zone] = np.inf
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +86,7 @@ def test_search_topk_matches_greedy_oracle_no_prune(rng):
     d = np.asarray(res.distances)
     p = np.asarray(res.positions)
     for i in range(2):
-        want = greedy_topk_oracle(sdtw_matrix(q[i], r)[-1], k, zone)
+        want = greedy_topk(sdtw_matrix(q[i], r)[-1], k, zone)
         for kk, (wd, wp) in enumerate(want):
             assert p[i, kk] == wp
             if wp >= 0:
@@ -227,20 +211,39 @@ def test_windowed_envelope_widens_left():
 def test_topk_select_suppression_and_padding():
     scores = jnp.asarray([5., 3., 4., 9., 1.], jnp.float32)
     pos = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
-    d, p = topk_select(scores, pos, 3, 1)
+    starts = pos - 1
+    d, p, s = topk_select(scores, pos, starts, 3, 1)
     # 1@4 suppresses 9@3; 3@1 suppresses 5@0 and 4@2 → only 2 matches.
     np.testing.assert_array_equal(np.asarray(p), [4, 1, -1])
+    np.testing.assert_array_equal(np.asarray(s), [3, 0, -1])
     assert np.asarray(d)[2] == np.inf
+
+
+def test_topk_select_span_overlap_mode():
+    """excl_span suppresses on interval intersection, not end distance:
+    a far-ended candidate whose span reaches back over the pick dies; a
+    close-ended but disjoint one survives."""
+    scores = jnp.asarray([1., 2., 3.], jnp.float32)
+    ends = jnp.asarray([10, 40, 13], jnp.int32)
+    starts = jnp.asarray([5, 8, 12], jnp.int32)    # [5,10], [8,40], [12,13]
+    d, p, s = topk_select(scores, ends, starts, 3, 0, excl_span=True)
+    # pick [5,10] → kills [8,40] (overlap) but keeps disjoint [12,13],
+    # even though end 13 is nearer than end 40.
+    np.testing.assert_array_equal(np.asarray(p), [10, 13, -1])
+    np.testing.assert_array_equal(np.asarray(s), [5, 12, -1])
 
 
 def test_topk_merge_tie_prefers_heap():
     """Exact ties keep the earlier (heap/earlier-chunk) position."""
-    hd, hp = topk_init(1, 1, jnp.float32)
-    d1, p1 = topk_merge(hd[0], hp[0], jnp.asarray([7.], jnp.float32),
-                        jnp.asarray([10], jnp.int32), 1, 2)
-    d2, p2 = topk_merge(d1, p1, jnp.asarray([7.], jnp.float32),
-                        jnp.asarray([50], jnp.int32), 1, 2)
-    assert int(p2[0]) == 10 and float(d2[0]) == 7.0
+    hd, hp, hs = topk_init(1, 1, jnp.float32)
+    d1, p1, s1 = topk_merge(hd[0], hp[0], hs[0],
+                            jnp.asarray([7.], jnp.float32),
+                            jnp.asarray([10], jnp.int32),
+                            jnp.asarray([8], jnp.int32), 1, 2)
+    d2, p2, s2 = topk_merge(d1, p1, s1, jnp.asarray([7.], jnp.float32),
+                            jnp.asarray([50], jnp.int32),
+                            jnp.asarray([48], jnp.int32), 1, 2)
+    assert int(p2[0]) == 10 and float(d2[0]) == 7.0 and int(s2[0]) == 8
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,324 @@
+"""Match spans and alignment-path traceback: the oracle-differential
+harness across every engine path.
+
+Ground truth comes exclusively from ``tests/oracle.py`` (the lexicographic
+start-lane DP + pinned-window path traceback). The five single-process
+execution regimes (rowscan, wavefront, pallas, streamed pallas, chunked)
+are asserted bitwise against it for int32 (and for integer-valued float32,
+which is exact); the 8-device sharded regime is §10 of
+``_distributed_check.py`` (the ``-m slow`` lane). Golden ``.npz`` fixtures
+pin the exact outputs of a fixed seed against silent cross-version drift.
+"""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracle import greedy_topk_spans, sdtw_path, sdtw_span
+
+from repro.core import align, check_path, path_cost, sdtw, traceback_path
+from repro.core.distances import INT_BIG
+from repro.search import search_topk
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "sdtw_spans_v1.npz"
+
+#: Every single-process execution regime behind ``engine.sdtw``.
+SINGLE_IMPLS = [("rowscan", {}), ("wavefront", {}),
+                ("pallas", {"block_q": 2, "block_m": 8}),
+                ("pallas", {"chunk": 21, "block_q": 2, "block_m": 8}),
+                ("chunked", {"chunk": 16})]
+
+
+def _spans(q, r, impl, kw, metric="abs_diff"):
+    d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), impl=impl, metric=metric,
+                   return_spans=True, **kw)
+    return np.asarray(d), np.asarray(s), np.asarray(e)
+
+
+# ---------------------------------------------------------------------------
+# Differential: spans vs the oracle on all single-process impls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_spans_match_oracle_all_impls(metric, dtype, rng):
+    """(dist, start, end) of every impl == the lexicographic span oracle —
+    bitwise (integer-valued float32 is exact, so bitwise there too). Small
+    value range forces plenty of exact ties, exercising the tie-break."""
+    for _ in range(4):
+        nq = int(rng.integers(1, 5))
+        n = int(rng.integers(1, 10))
+        m = int(rng.integers(1, 60))
+        q = rng.integers(-8, 8, (nq, n)).astype(dtype)
+        r = rng.integers(-8, 8, m).astype(dtype)
+        want = np.array([sdtw_span(q[i], r, metric) for i in range(nq)])
+        for impl, kw in SINGLE_IMPLS:
+            d, s, e = _spans(q, r, impl, kw, metric)
+            np.testing.assert_array_equal(d, want[:, 0], err_msg=impl)
+            np.testing.assert_array_equal(s, want[:, 1], err_msg=impl)
+            np.testing.assert_array_equal(e, want[:, 2], err_msg=impl)
+
+
+def test_spans_chunk_and_block_invariance(rng):
+    """Tiling must not change the reported span — chunk=1 (pure column
+    streaming) through chunk > M, and pallas block shapes."""
+    q = rng.integers(-10, 10, (3, 8)).astype(np.int32)
+    r = rng.integers(-10, 10, 137).astype(np.int32)
+    base = _spans(q, r, "chunked", {"chunk": 137})
+    for c in (1, 5, 8, 1024):
+        got = _spans(q, r, "chunked", {"chunk": c})
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a, b, err_msg=f"chunk={c}")
+    for bq, bm in ((1, 8), (2, 32), (4, 256)):
+        got = _spans(q, r, "pallas", {"block_q": bq, "block_m": bm})
+        for a, b in zip(base, got):
+            np.testing.assert_array_equal(a, b, err_msg=f"block={bq},{bm}")
+
+
+def test_spans_ragged_matches_per_query(rng):
+    r = rng.integers(-20, 20, 90).astype(np.int32)
+    ragged = [rng.integers(-20, 20, L).astype(np.int32) for L in (3, 17, 8)]
+    dr, sr, er = sdtw(ragged, jnp.asarray(r), return_spans=True)
+    for i, q in enumerate(ragged):
+        d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), return_spans=True)
+        assert (int(dr[i]), int(sr[i]), int(er[i])) == \
+            (int(d), int(s), int(e))
+
+
+# ---------------------------------------------------------------------------
+# Top-K spans (heap start lane) + span-overlap suppression
+# ---------------------------------------------------------------------------
+
+def test_topk_spans_match_greedy_oracle(rng):
+    """engine.sdtw(top_k=, return_spans=True) == greedy select-then-suppress
+    on the oracle's last row with its start lane, both exclusion modes."""
+    q = rng.integers(-10, 10, (2, 6)).astype(np.int32)
+    r = rng.integers(-10, 10, 120).astype(np.int32)
+    k, zone = 3, 4
+    for mode in ("end", "span"):
+        d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=k,
+                       excl_zone=zone, excl_mode=mode, return_spans=True)
+        d, s, e = np.asarray(d), np.asarray(s), np.asarray(e)
+        for i in range(2):
+            want = greedy_topk_spans(q[i], r, k, zone,
+                                     excl_span=(mode == "span"))
+            for kk, (wd, ws, we) in enumerate(want):
+                assert e[i, kk] == we, (mode, i, kk)
+                assert s[i, kk] == ws, (mode, i, kk)
+                if we >= 0:
+                    assert d[i, kk] == wd, (mode, i, kk)
+
+
+def test_span_overlap_mode_reports_disjoint_spans(rng):
+    """excl_mode='span' (default zone 0): no two reported matches of a
+    query share a reference sample."""
+    q = rng.integers(-40, 40, (3, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 200).astype(np.int32)
+    _, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=4,
+                   excl_mode="span", return_spans=True)
+    s, e = np.asarray(s), np.asarray(e)
+    for i in range(3):
+        spans = [(a, b) for a, b in zip(s[i], e[i]) if a >= 0]
+        assert spans, "no live matches reported"
+        for x in range(len(spans)):
+            for y in range(x + 1, len(spans)):
+                lo, hi = sorted((spans[x], spans[y]))
+                assert lo[1] < hi[0], (spans[x], spans[y])
+
+
+def test_span_mode_requires_topk():
+    with pytest.raises(ValueError, match="span"):
+        sdtw(jnp.zeros((1, 4), jnp.int32), jnp.zeros(8, jnp.int32),
+             excl_mode="span")
+
+
+def test_search_topk_spans_match_engine(rng):
+    """search_topk reports the same spans as the engine: exact path always,
+    pruned path for in-cap spans (top-1)."""
+    q = rng.integers(-40, 40, (3, 10)).astype(np.int32)
+    r = rng.integers(-40, 40, 300).astype(np.int32)
+    res = search_topk(jnp.asarray(q), jnp.asarray(r), k=2, prune=False,
+                      chunk=32)
+    d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=2,
+                   return_spans=True)
+    np.testing.assert_array_equal(np.asarray(res.distances), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(res.starts), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(res.positions), np.asarray(e))
+    assert res.spans.shape == (3, 2, 2)
+    pruned = search_topk(jnp.asarray(q), jnp.asarray(r), k=1, chunk=64)
+    want_d, want_s, want_e = sdtw(jnp.asarray(q), jnp.asarray(r),
+                                  return_spans=True)
+    np.testing.assert_array_equal(np.asarray(pruned.distances)[:, 0],
+                                  np.asarray(want_d))
+    np.testing.assert_array_equal(np.asarray(pruned.starts)[:, 0],
+                                  np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(pruned.positions)[:, 0],
+                                  np.asarray(want_e))
+
+
+# ---------------------------------------------------------------------------
+# Alignment-path traceback
+# ---------------------------------------------------------------------------
+
+def test_align_replays_distance_bitwise(rng):
+    """engine.align(): the recovered path is structurally valid, matches
+    the oracle's pinned-window traceback exactly, and its accumulated
+    cost reproduces the engine distance bitwise (int32 and float32)."""
+    for dtype in (np.int32, np.float32):
+        q = rng.integers(-10, 10, (3, 7)).astype(dtype)
+        r = rng.integers(-10, 10, 80).astype(dtype)
+        d, s, e = _spans(q, r, "chunked", {"chunk": 16})
+        results = align(jnp.asarray(q), jnp.asarray(r), trace_chunk=5)
+        for i, ar in enumerate(results):
+            assert (ar.start, ar.end) == (int(s[i]), int(e[i]))
+            assert check_path(ar.path, ar.start, ar.end, 7)
+            assert path_cost(q[i], r, ar.path) == d[i]
+            np.testing.assert_array_equal(
+                ar.path, sdtw_path(q[i], r, ar.start, ar.end))
+
+
+def test_traceback_chunk_invariance(rng):
+    """The checkpointed block replay must produce the identical path for
+    any block width (1 = column-at-a-time … ≥ window = single block)."""
+    q = rng.integers(-10, 10, 9).astype(np.int32)
+    r = rng.integers(-10, 10, 64).astype(np.int32)
+    _, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), return_spans=True)
+    paths = [traceback_path(q, r, int(s), int(e), chunk=c)
+             for c in (1, 3, 7, 64, 10**6)]
+    assert check_path(paths[0], int(s), int(e), 9)
+    for p in paths[1:]:
+        np.testing.assert_array_equal(paths[0], p)
+
+
+def test_traceback_chunk1_boundary_diagonal_keeps_start_cell():
+    """Regression: with chunk=1 every move crosses a block boundary; a
+    *diagonal* step landing on (0, start) used to terminate the outer
+    block loop before block 0 replayed, silently dropping the path's
+    first cell (and its distance contribution)."""
+    q = np.asarray([0, 5], np.int32)
+    r = np.asarray([9, 9, 0, 5, 9], np.int32)   # exact match at [2, 3]
+    want = np.asarray([[0, 2], [1, 3]], np.int64)
+    for c in (1, 2, 64):
+        p = traceback_path(q, r, 2, 3, chunk=c)
+        np.testing.assert_array_equal(p, want, err_msg=f"chunk={c}")
+        assert check_path(p, 2, 3, 2)
+        assert int(path_cost(q, r, p)) == 0
+
+
+def test_align_exact_subsequence_is_diagonal(rng):
+    """A planted exact match aligns 1:1: span == the planted window and
+    the path is the pure diagonal."""
+    r = rng.integers(-50, 50, 100).astype(np.int32)
+    q = r[37:59]
+    ar = align(jnp.asarray(q), jnp.asarray(r))
+    assert (int(ar.distance), ar.start, ar.end) == (0, 37, 58)
+    want = np.stack([np.arange(22), np.arange(37, 59)], axis=1)
+    np.testing.assert_array_equal(ar.path, want)
+
+
+def test_align_saturated_match_has_no_span(rng):
+    """When every alignment saturates the int32 lattice (per-cell square
+    distances fit, multi-cell paths clamp at INT_BIG — the largest regime
+    the lattice supports) there is no meaningful span: align reports
+    (-1, -1, None) instead of garbage."""
+    q = np.full((6,), -10_000, np.int32)
+    r = np.full((48,), 10_000, np.int32)
+    ar = align(jnp.asarray(q), jnp.asarray(r), metric="square_diff")
+    assert int(ar.distance) == INT_BIG
+    assert ar.start == -1 and ar.end == -1 and ar.path is None
+
+
+def test_traceback_rejects_bad_span(rng):
+    q = rng.integers(-5, 5, 4).astype(np.int32)
+    r = rng.integers(-5, 5, 16).astype(np.int32)
+    with pytest.raises(ValueError, match="span"):
+        traceback_path(q, r, 5, 3)
+    with pytest.raises(ValueError, match="span"):
+        traceback_path(q, r, -1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property suite
+# ---------------------------------------------------------------------------
+
+def test_hyp_span_and_path_properties():
+    """Property suite: across random int32 inputs and every in-core impl,
+    start <= end, spans differential-match the oracle, the traced path is
+    monotone/contiguous with the span endpoints, and its cost sums
+    bitwise to the reported distance."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(-6, 6), min_size=1, max_size=8),
+           st.lists(st.integers(-6, 6), min_size=1, max_size=24),
+           st.sampled_from(["abs_diff", "square_diff"]))
+    def prop(qs, rs, metric):
+        q = np.asarray(qs, np.int32)
+        r = np.asarray(rs, np.int32)
+        want = sdtw_span(q, r, metric)
+        for impl, kw in (("rowscan", {}), ("wavefront", {}),
+                         ("chunked", {"chunk": 8})):
+            d, s, e = _spans(q[None], r, impl, kw, metric)
+            assert (float(d[0]), int(s[0]), int(e[0])) == want, impl
+            assert 0 <= s[0] <= e[0] < len(r)
+        ar = align(jnp.asarray(q), jnp.asarray(r), metric=metric,
+                   trace_chunk=4)
+        assert check_path(ar.path, ar.start, ar.end, len(q))
+        assert int(path_cost(q, r, ar.path, metric)) == int(want[0])
+        np.testing.assert_array_equal(
+            ar.path, sdtw_path(q, r, ar.start, ar.end, metric))
+
+    prop()
+
+
+def test_hyp_topk_span_mode_disjoint():
+    """Property: span-overlap suppression never reports overlapping spans
+    and the top-1 always equals the plain span call."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(-10, 10), min_size=2, max_size=6),
+           st.lists(st.integers(-10, 10), min_size=8, max_size=40))
+    def prop(qs, rs):
+        q = np.asarray(qs, np.int32)
+        r = np.asarray(rs, np.int32)
+        d, s, e = sdtw(jnp.asarray(q), jnp.asarray(r), top_k=3,
+                       excl_mode="span", return_spans=True)
+        d, s, e = np.asarray(d), np.asarray(s), np.asarray(e)
+        pd, ps, pe = sdtw(jnp.asarray(q), jnp.asarray(r),
+                          return_spans=True)
+        assert (d[0], s[0], e[0]) == (pd, ps, pe)
+        live = [(int(a), int(b)) for a, b in zip(s, e) if a >= 0]
+        for x in range(len(live)):
+            for y in range(x + 1, len(live)):
+                lo, hi = sorted((live[x], live[y]))
+                assert lo[1] < hi[0]
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Golden regression fixtures (bitwise, fixed seed)
+# ---------------------------------------------------------------------------
+
+def test_golden_spans_bitwise():
+    """Recompute the committed fixture (tests/golden/make_golden.py) and
+    require bitwise equality — the jax-version-drift tripwire (the PR 1
+    breakage class). Regenerate *only* on an intentional semantic change:
+    ``python tests/golden/make_golden.py``."""
+    assert GOLDEN.exists(), "golden fixture missing — run " \
+        "tests/golden/make_golden.py"
+    data = np.load(GOLDEN)
+    from golden.make_golden import compute  # noqa: E402
+    fresh = compute()
+    assert set(fresh) == set(data.files)
+    for key in data.files:
+        np.testing.assert_array_equal(
+            np.asarray(fresh[key]), data[key],
+            err_msg=f"golden drift in {key!r} — if intentional, "
+                    "regenerate via tests/golden/make_golden.py")
