@@ -21,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import align, sdtw, sdtw_batch
+from repro.core import align, sdtw, sdtw_batch, stream
 from repro.core.distances import accum_dtype, big, pointwise_distance, sat_add
+from repro.core.sdtw import sdtw_chunked
 from repro.kernels.sdtw import sdtw_pallas
 
 from .common import emit, print_rows, time_call
@@ -130,6 +131,44 @@ def main(smoke: bool = False):
     rows.append(emit(
         f"sdtw_kernel/engine_chunked_spans_b{bl}_n{nl}_m{ml}_c{chunks[-1]}",
         us, f"span_overhead_vs_plain={us/us_plain:.2f}x"))
+
+    # Streaming sessions on the same long reference: the online monitor
+    # (feed loop + per-feed host hops) vs the offline chunked call, with a
+    # bitwise streamed-vs-offline gate baked into the derived column.
+    tile = chunks[-1]
+    feed = tile // 2            # unaligned arrivals: exercises buffering
+    rl_np = np.asarray(rl)
+    cells = bl * nl * ml
+
+    def run_stream(**kw):
+        s = stream(ql, chunk=tile, **kw)
+        for off in range(0, ml, feed):
+            s.feed(rl_np[off:off + feed])
+        return s.results()
+
+    us = time_call(lambda: run_stream().distances, repeats=3, warmup=1)
+    eq = np.array_equal(np.asarray(run_stream().distances),
+                        np.asarray(sdtw(ql, rl, impl="chunked",
+                                        chunk=tile)))
+    rate = cells / (us * 1e-6) / 1e6
+    rows.append(emit(
+        f"sdtw_kernel/stream_feed_b{bl}_n{nl}_m{ml}_c{tile}", us,
+        f"Mcells_per_s={rate:.1f};offline_ratio={us/us_plain:.2f}x;"
+        f"streamed_vs_offline={'equal' if eq else 'DIFFERS'}"))
+
+    us_offk = time_call(functools.partial(sdtw_chunked, ql, rl, chunk=tile,
+                                          top_k=3), repeats=3, warmup=1)
+    us_k = time_call(lambda: run_stream(top_k=3).distances, repeats=3,
+                     warmup=1)
+    sres = run_stream(top_k=3)
+    kd, kp = sdtw_chunked(ql, rl, chunk=tile, top_k=3)
+    eq = (np.array_equal(np.asarray(sres.distances), np.asarray(kd))
+          and np.array_equal(np.asarray(sres.positions), np.asarray(kp)))
+    rate = cells / (us_k * 1e-6) / 1e6
+    rows.append(emit(
+        f"sdtw_kernel/stream_topk_b{bl}_n{nl}_m{ml}_c{tile}", us_k,
+        f"Mcells_per_s={rate:.1f};offline_ratio={us_k/us_offk:.2f}x;"
+        f"streamed_vs_offline={'equal' if eq else 'DIFFERS'}"))
     return rows
 
 

@@ -2,15 +2,18 @@
 
 Phase 1 verifies the execution schemes agree on a batch of queries
 (rowscan / wavefront / pallas — the correctness gate every deployment
-runs at startup). Phase 2 is the actual serving loop: batched requests →
-top-K match positions via ``repro.search.search_topk``, with the
-per-reference envelope cached across requests (the reference is
-long-lived; queries stream in) and the LB cascade pruning chunks that
-cannot beat each request's running matches. Phase 3 is anomaly
-localization: the most anomalous queries get their matched *span* and
-full warping path via ``engine.align()`` — where in the recording the
-nearest normal event lies and how the query warps onto it — with the
-replayed path cost checked against the reported distance.
+runs at startup). Phase 2 is a *streaming monitor*: the reference
+arrives as a live feed (``engine.stream``), the query batch stands as
+persistent monitors whose top-K matches and threshold alerts update as
+samples arrive, the session snapshots mid-stream and restores
+(fault-tolerant serving), the per-tile envelope lands in the shared
+``EnvelopeCache`` for later offline requests, and the end-of-stream
+state is asserted bitwise against the offline engine and search
+answers. Phase 3 is anomaly localization: the most anomalous queries
+get their matched *span* and full warping path via ``engine.align()`` —
+where in the recording the nearest normal event lies and how the query
+warps onto it — with the replayed path cost checked against the
+reported distance.
 
 Run:  PYTHONPATH=src python examples/tsa_serving.py [--queries 64]
 """
@@ -21,16 +24,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import align, path_cost, sdtw_batch, synthetic_timeseries
+from repro.core import align, path_cost, sdtw_batch, stream, \
+    synthetic_timeseries
+from repro.core.sdtw import sdtw_chunked
 from repro.kernels.sdtw import sdtw_pallas
 from repro.search import EnvelopeCache, search_topk
+from repro.stream import StreamSession
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--queries", type=int, default=32)
 ap.add_argument("--query-len", type=int, default=48)
 ap.add_argument("--ref-len", type=int, default=4096)
-ap.add_argument("--requests", type=int, default=4,
-                help="serving-loop request batches")
+ap.add_argument("--arrival", type=int, default=160,
+                help="streaming arrival size (samples per feed)")
 ap.add_argument("--top-k", type=int, default=3)
 args = ap.parse_args()
 
@@ -69,40 +75,72 @@ flagged = np.where(d > thr)[0]
 print(f"{len(flagged)} queries flagged as anomalous (thr={thr:.0f}): "
       f"{flagged[:10].tolist()}{'…' if len(flagged) > 10 else ''}")
 
-# --- phase 2: request → top-K matches loop (the search front door) -------
-print(f"\nserving loop: {args.requests} request batches → top-{args.top_k} "
-      "matches each")
+# --- phase 2: streaming monitor (the reference arrives as a live feed) ----
+# The query batch becomes a set of standing monitors; the recording
+# streams in --arrival-sized feeds. The session keeps every query's
+# top-K matches current, fires threshold alerts as matching events
+# arrive, survives a mid-stream snapshot/restore, and shares its
+# incrementally-built envelope with the offline search path.
+tile = 512
+alert_thr = float(np.percentile(d, 5))
+alerts = []
 cache = EnvelopeCache()
-per_batch = max(1, args.queries // args.requests)
-for req in range(args.requests):
-    # Each "request" carries a fresh batch of queries from the stream.
-    batch = jnp.asarray(synthetic_timeseries(
-        rng, per_batch * args.query_len, anomaly_rate=0.4)
-        .reshape(per_batch, args.query_len))
-    t0 = time.perf_counter()
-    res = search_topk(batch, reference, k=args.top_k, cache=cache,
-                      ref_key="stream")
-    jax.block_until_ready(res.distances)
-    dt = time.perf_counter() - t0
-    best_d = np.asarray(res.distances)[:, 0]
-    best_p = np.asarray(res.positions)[:, 0]
-    best_s = np.asarray(res.starts)[:, 0]
-    top = best_d.argmin()
-    print(f"  req {req}: {dt*1e3:7.2f} ms  "
-          f"pruned {res.chunks_pruned}/{res.chunks_total} chunks "
-          f"(envelope cache {cache.hits} hits)  "
-          f"best match d={best_d.min()} "
-          f"@ ref[{best_s[top]}:{best_p[top]}]")
+print(f"\nstreaming monitor: {args.ref_len} samples arriving "
+      f"{args.arrival} at a time (DP tile {tile}, alert at d<="
+      f"{alert_thr:.0f})")
+session = stream(queries, chunk=tile, top_k=args.top_k, return_spans=True,
+                 alert_threshold=alert_thr, on_alert=alerts.append)
+# A pruned sibling session builds the shared envelope cache online.
+pruned = stream(queries, chunk=tile, top_k=args.top_k, return_spans=True,
+                prune=True, cache=cache, ref_key="live")
+feed_np = np.asarray(reference)
+t0 = time.perf_counter()
+for off in range(0, args.ref_len, args.arrival):
+    arrival = feed_np[off:off + args.arrival]
+    session.feed(arrival)
+    pruned.feed(arrival)
+    if off == (args.ref_len // (2 * args.arrival)) * args.arrival:
+        # Fault-tolerance drill: serialize, drop, restore, keep feeding.
+        session = StreamSession.restore(session.snapshot(),
+                                        on_alert=alerts.append)
+dt = time.perf_counter() - t0
+res = session.results()
+rate = args.ref_len / dt / 1e3
+print(f"  streamed {args.ref_len} samples in {dt*1e3:.1f} ms "
+      f"({rate:,.0f} Ksamples/s incl. snapshot/restore), "
+      f"{len(alerts)} alerts")
+for ev in alerts[:3]:
+    print(f"    alert: query {ev.query} matched d={ev.distance:.0f} "
+          f"@ ref[{ev.start}:{ev.end}]")
 
-# The engine and the search front door agree on the best distance.
-# (prune=False: the exact streaming path — unconditional, so the gate
-# holds for any --ref-len/--query-len, not just spans within span_cap.)
-check = np.asarray(search_topk(queries, reference, k=1, cache=cache,
-                               ref_key="stream",
-                               prune=False).distances)[:, 0]
-assert np.array_equal(check, d), "search_topk top-1 diverged from engine"
-print(f"search top-1 == engine distances ✓ "
-      f"(envelope computed {cache.misses}×, reused {cache.hits}×)")
+# End-of-stream state == the offline answers, bitwise.
+kd, ks, ke = sdtw_chunked(queries, reference, chunk=tile,
+                          top_k=args.top_k, return_spans=True)
+assert np.array_equal(np.asarray(res.distances), np.asarray(kd)), \
+    "streamed heap diverged from offline engine"
+assert np.array_equal(np.asarray(res.starts), np.asarray(ks))
+assert np.array_equal(np.asarray(res.positions), np.asarray(ke))
+pres = pruned.results()
+assert np.array_equal(np.asarray(pres.distances), np.asarray(kd)), \
+    "pruned stream diverged from offline engine"
+print(f"streamed top-{args.top_k} == offline engine bitwise ✓ "
+      f"(pruned sibling skipped "
+      f"{pres.tiles_pruned}/{pres.tiles_total} tiles, same answer)")
+
+# The streamed envelope now serves offline requests: a pruned search
+# against the materialized recording hits the cache entry the stream
+# built tile by tile (exact top-1 gate runs prune=False, cache-free).
+pruned.flush()
+check = search_topk(queries, reference, k=1, chunk=tile, cache=cache,
+                    ref_key="live")
+assert cache.hits >= 1, "offline search missed the streamed envelope"
+exact = search_topk(queries, reference, k=1, chunk=tile, prune=False)
+assert np.array_equal(np.asarray(exact.distances)[:, 0], d), \
+    "search_topk top-1 diverged from engine"
+assert np.array_equal(np.asarray(check.distances)[:, 0], d), \
+    "pruned search top-1 diverged from engine"
+print(f"offline search after the stream: top-1 == engine ✓ "
+      f"(envelope cache: {cache.hits} hit(s), built online by the stream)")
 
 # --- phase 3: anomaly localization (spans + warping paths) ----------------
 # For the most anomalous queries, report *where* the nearest normal event

@@ -1,6 +1,6 @@
 """MATSA core: sDTW algorithms, the accelerator API, and evaluation models."""
 from .distances import METRICS, pointwise_distance
-from .engine import align, choose_impl, sdtw
+from .engine import align, choose_impl, sdtw, stream
 from .traceback import AlignResult, check_path, path_cost, traceback_path
 from .matsa_api import MatsaResult, load_real_workload_shapes, matsa, synthetic_timeseries
 from .pum_model import (MATSA_EMBEDDED, MATSA_HPC, MATSA_PORTABLE, SWEEP,
@@ -13,7 +13,7 @@ from .sdtw_ref import dtw_ref, sdtw_matrix, sdtw_ref
 from .topk import topk_init, topk_merge, topk_select
 
 __all__ = [
-    "sdtw", "align", "choose_impl", "sdtw_chunked",
+    "sdtw", "align", "choose_impl", "sdtw_chunked", "stream",
     "AlignResult", "traceback_path", "path_cost", "check_path",
     "METRICS", "pointwise_distance",
     "MatsaResult", "matsa", "load_real_workload_shapes", "synthetic_timeseries",

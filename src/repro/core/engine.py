@@ -286,6 +286,75 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     return out
 
 
+def stream(queries, *, qlens=None, metric: str = "abs_diff",
+           impl: str = "auto", chunk: Optional[int] = None,
+           mesh=None, ref_axis: str = "ref", n_micro: Optional[int] = None,
+           top_k: Optional[int] = None, excl_zone=None,
+           excl_mode: str = "end", return_spans: bool = False,
+           return_positions: bool = False, excl_lo=None, excl_hi=None,
+           prune: bool = False, span_cap: Optional[int] = None,
+           alert_threshold=None, on_alert=None, cache=None, ref_key=None,
+           block_q: int = 8, block_m: int = 512):
+    """Open an online monitoring session: the streaming front door.
+
+    Where ``sdtw()`` answers one offline query batch against a
+    materialized reference, ``stream()`` returns a session whose
+    ``feed(chunk)`` consumes the reference as an unbounded chunk sequence
+    — the chunk-carry protocol run forever. ``session.results()`` at any
+    point equals the offline ``sdtw()`` / ``search_topk()`` answer over
+    the samples fed so far (bitwise for int32, any feed partition);
+    ``session.snapshot()`` / ``StreamSession.restore()`` give
+    fault-tolerant serving. See ``repro.stream`` for the session API
+    (top-K heaps, online LB pruning, threshold alerts).
+
+    Dispatch: ``mesh=`` (or ``impl='sharded'``) returns the
+    ``ShardedStreamSession`` (per-device chunk streams through the
+    ppermute carry); ``impl='pallas'`` streams fed chunks through the
+    kernel's carry entry/exit; ``'auto'`` picks the Pallas path on a TPU
+    backend for plain distance/span monitoring and the rowscan tile loop
+    everywhere else. ``chunk`` is the internal DP tile size (compile
+    granularity) — feed granularity is independent of it.
+    """
+    from repro.stream import ShardedStreamSession, StreamSession
+    if impl not in ("auto", "rowscan", "pallas", "sharded"):
+        raise ValueError(
+            f"impl must be 'auto', 'rowscan', 'pallas' or 'sharded' for "
+            f"streaming, got {impl!r}")
+    if mesh is not None or impl == "sharded":
+        if prune:
+            raise ValueError("mesh= streams every chunk; the LB cascade "
+                             "is single-process (drop prune=True)")
+        if alert_threshold is not None or on_alert is not None:
+            raise ValueError("alerts are single-process; drop mesh=")
+        if cache is not None or ref_key is not None:
+            raise ValueError("the envelope cache is built by the "
+                             "single-process pruning path; cache=/ref_key= "
+                             "have no effect on a sharded session (drop "
+                             "them or drop mesh=)")
+        if span_cap is not None:
+            raise ValueError("span_cap= only bounds the pruned path; a "
+                             "sharded session streams every chunk exactly")
+        return ShardedStreamSession(
+            queries, qlens=qlens, metric=metric, mesh=mesh, axis=ref_axis,
+            chunk=chunk, n_micro=n_micro, top_k=top_k, excl_zone=excl_zone,
+            excl_mode=excl_mode, return_spans=return_spans,
+            return_positions=return_positions, excl_lo=excl_lo,
+            excl_hi=excl_hi)
+    if impl == "auto":
+        wants_rowscan = (top_k is not None or prune
+                         or alert_threshold is not None
+                         or excl_lo is not None)
+        impl = ("pallas" if jax.default_backend() == "tpu"
+                and not wants_rowscan else "rowscan")
+    return StreamSession(
+        queries, qlens=qlens, metric=metric, chunk=chunk, impl=impl,
+        top_k=top_k, excl_zone=excl_zone, excl_mode=excl_mode,
+        return_spans=return_spans, return_positions=return_positions,
+        excl_lo=excl_lo, excl_hi=excl_hi, prune=prune, span_cap=span_cap,
+        alert_threshold=alert_threshold, on_alert=on_alert, cache=cache,
+        ref_key=ref_key, block_q=block_q, block_m=block_m)
+
+
 def align(queries, reference, qlens=None, *, metric: str = "abs_diff",
           impl: str = "auto", chunk: Optional[int] = None, mesh=None,
           ref_axis: str = "ref",

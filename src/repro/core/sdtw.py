@@ -334,7 +334,8 @@ def _chunk_masked_distance(qi, ref_chunk, metric, j0, m_total, excl_lo,
 def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
                        m_total=None, metric: str = "abs_diff",
                        excl_lo=None, excl_hi=None,
-                       return_lastrow: bool = False, bstart=None):
+                       return_lastrow: bool = False, bstart=None,
+                       clen=None):
     """One reference chunk of the row-scan, entered/exited via the carry.
 
     Args:
@@ -350,12 +351,25 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
       bstart:    (N,) start lane of the boundary column (INT_FAR for the
                  first chunk). Passing it switches on start tracking: every
                  output gains the matching start lane.
+      clen:      true number of reference columns in this chunk (traced;
+                 defaults to C). With ``clen`` the returned boundary column
+                 is S[:, j0 + clen - 1] instead of the final chunk column,
+                 so a tile right-padded past the true stream end (the pad
+                 columns must be banned via ``m_total``) still exits with a
+                 carry the next chunk can continue from — the streaming
+                 session's one-compiled-shape-per-tile trick.
 
-    Returns ``(new_bcol, new_best)`` with new_bcol = S[:, j0 + C - 1], plus
-    the (C,) last row when ``return_lastrow``. With ``bstart`` the returns
-    become ``(new_bcol, new_bstart, new_best[, lastrow, lastrow_starts])``.
+    Returns ``(new_bcol, new_best)`` with new_bcol = S[:, j0 + C - 1] (or
+    at ``clen - 1``), plus the (C,) last row when ``return_lastrow``. With
+    ``bstart`` the returns become
+    ``(new_bcol, new_bstart, new_best[, lastrow, lastrow_starts])``.
     """
     track = bstart is not None
+    if clen is None:
+        pick = lambda v: v[-1]
+    else:
+        _cl = jnp.asarray(clen, jnp.int32) - 1
+        pick = lambda v: lax.dynamic_index_in_dim(v, _cl, keepdims=False)
     acc = accum_dtype(jnp.result_type(query, ref_chunk))
     BIG = big(acc)
     n = query.shape[0]
@@ -410,12 +424,12 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
                 lrow = jnp.where(hit, s, lrow)
                 lstart = jnp.where(hit, sstart, lstart)
                 return ((s, sstart, best, lrow, lstart, i + 1),
-                        (s[-1], sstart[-1]))
-            return (s, sstart, best, i + 1), (s[-1], sstart[-1])
+                        (pick(s), pick(sstart)))
+            return (s, sstart, best, i + 1), (pick(s), pick(sstart))
         if return_lastrow:
             lrow = jnp.where(hit, s, lrow)
-            return (s, best, lrow, i + 1), s[-1]
-        return (s, best, i + 1), s[-1]
+            return (s, best, lrow, i + 1), pick(s)
+        return (s, best, i + 1), pick(s)
 
     if track:
         bstart = bstart.astype(jnp.int32)
@@ -439,41 +453,45 @@ def sdtw_rowscan_chunk(query, ref_chunk, bcol, best, qlen=None, j0=0,
                                           xs)
     if track:
         tail_v, tail_s = tail
-        new_bcol = jnp.concatenate([s0[-1:], tail_v])
-        new_bstart = jnp.concatenate([st0[-1:], tail_s])
+        new_bcol = jnp.concatenate([pick(s0)[None], tail_v])
+        new_bstart = jnp.concatenate([pick(st0)[None], tail_s])
         if return_lastrow:
             return new_bcol, new_bstart, best, lrow, lstart
         return new_bcol, new_bstart, best
-    new_bcol = jnp.concatenate([s0[-1:], tail])
+    new_bcol = jnp.concatenate([pick(s0)[None], tail])
     if return_lastrow:
         return new_bcol, best, lrow
     return new_bcol, best
 
 
 def sdtw_chunk_batch(queries, ref_chunk, qlens, carry, j0, m_total,
-                     metric: str, excl_lo, excl_hi):
+                     metric: str, excl_lo, excl_hi, clen=None):
     """Advance the batched carry by one chunk.
 
     ``carry`` is ``(bcol (nq, N), best (nq,))`` or, with the start lane,
-    ``(bcol, bstart, best)`` — the lane is tracked iff it is present."""
+    ``(bcol, bstart, best)`` — the lane is tracked iff it is present.
+    ``clen`` (traced) is the chunk's true column count — see
+    ``sdtw_rowscan_chunk``."""
     if len(carry) == 3:
         bcol, bstart, best = carry
         return jax.vmap(
             lambda q, ql, bc, bs, be, lo, hi: sdtw_rowscan_chunk(
                 q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi,
-                bstart=bs)
+                bstart=bs, clen=clen)
         )(queries, qlens, bcol, bstart, best, excl_lo, excl_hi)
     bcol, best = carry
     return jax.vmap(
         lambda q, ql, bc, be, lo, hi: sdtw_rowscan_chunk(
-            q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi)
+            q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi,
+            clen=clen)
     )(queries, qlens, bcol, best, excl_lo, excl_hi)
 
 
 def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
                           metric: str, excl_lo, excl_hi, k: int,
                           excl_zone, excl_span: bool = False,
-                          track_start: bool = False):
+                          track_start: bool = False, clen=None,
+                          return_lastrow: bool = False):
     """Advance the *top-K* carry by one chunk.
 
     The carry is ``(bcol, best, top_d, top_p, top_s)`` or — with
@@ -489,7 +507,9 @@ def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
     tracking, the heap's start lane stays -1 and the boundary carry keeps
     the untaxed value-only lane. End positions are global (``j0`` offsets
     the chunk), so the same code serves the in-process streamer and the
-    sharded systolic pipeline.
+    sharded systolic pipeline. ``return_lastrow`` appends the (nq, C)
+    candidate row (and, when tracked, its start lane) to the output —
+    the streaming monitor's threshold-alert feed.
     """
     pos = j0 + jnp.arange(ref_chunk.shape[0], dtype=jnp.int32)
     if track_start:
@@ -498,9 +518,11 @@ def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
         def one(q, ql, bc, bs, be, lo, hi, hd, hp, hs, ez):
             nbc, nbs, nbe, lrow, lstart = sdtw_rowscan_chunk(
                 q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi,
-                return_lastrow=True, bstart=bs)
+                return_lastrow=True, bstart=bs, clen=clen)
             nd, np_, ns = topk_merge(hd, hp, hs, lrow, pos, lstart, k, ez,
                                      excl_span)
+            if return_lastrow:
+                return nbc, nbs, nbe, nd, np_, ns, lrow, lstart
             return nbc, nbs, nbe, nd, np_, ns
 
         return jax.vmap(one)(queries, qlens, bcol, bstart, best, excl_lo,
@@ -512,8 +534,10 @@ def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
     def one(q, ql, bc, be, lo, hi, hd, hp, hs, ez):
         nbc, nbe, lrow = sdtw_rowscan_chunk(
             q, ref_chunk, bc, be, ql, j0, m_total, metric, lo, hi,
-            return_lastrow=True)
+            return_lastrow=True, clen=clen)
         nd, np_, ns = topk_merge(hd, hp, hs, lrow, pos, no_start, k, ez)
+        if return_lastrow:
+            return nbc, nbe, nd, np_, ns, lrow
         return nbc, nbe, nd, np_, ns
 
     return jax.vmap(one)(queries, qlens, bcol, best, excl_lo, excl_hi,

@@ -119,6 +119,106 @@ def _build(mesh, axis: str, metric: str, chunk: int, ndev: int,
     return jax.jit(mapped)
 
 
+@functools.lru_cache(maxsize=None)
+def _build_feed(mesh, axis: str, metric: str, chunk: int, ndev: int,
+                n_micro: int, top_k, excl_zone, excl_span: bool,
+                track_start: bool):
+    """Jitted shard-mapped *streaming feed*: advance an explicit carry by
+    one sharded macro-chunk and hand the carry back.
+
+    Where ``_build`` starts every microbatch from a fresh carry and
+    harvests only the final result, the feed variant takes the previous
+    feed's per-microbatch carries as an input (device 0 enters each
+    microbatch from them instead of from scratch) and harvests the *full*
+    carry tuple exiting the last device — boundary column, start lane,
+    running best, and heap — so the caller can keep feeding macro-chunks
+    of an unbounded reference through the same ppermute systolic pipeline.
+    """
+    perm = [(i, i + 1) for i in range(ndev - 1)]
+    ticks = n_micro + ndev - 1
+
+    def body(r_shard, q_micro, qlen_micro, lo_micro, hi_micro, m_total,
+             j0_base, carry_in):
+        # carry_in leaves are (n_micro, mb, ...) — the stacked carries the
+        # previous feed harvested (or the session's fresh init).
+        d = lax.axis_index(axis)
+        seg = r_shard.shape[1]
+        j0 = j0_base + d * seg
+
+        def tick(carry, t):
+            mb_idx = jnp.clip(t - d, 0, n_micro - 1)
+            q = lax.dynamic_index_in_dim(q_micro, mb_idx, keepdims=False)
+            ql = lax.dynamic_index_in_dim(qlen_micro, mb_idx, keepdims=False)
+            lo = lax.dynamic_index_in_dim(lo_micro, mb_idx, keepdims=False)
+            hi = lax.dynamic_index_in_dim(hi_micro, mb_idx, keepdims=False)
+            own = jax.tree.map(
+                lambda x: lax.dynamic_index_in_dim(x, mb_idx,
+                                                   keepdims=False),
+                carry_in)
+            # Device 0 enters from the session carry; the others continue
+            # from whatever the left neighbour handed over.
+            cin = jax.tree.map(
+                lambda f, c: jnp.where(d == 0, f, c.astype(f.dtype)),
+                own, carry)
+            if top_k is not None:
+                ez = (default_excl_zone(ql) if excl_zone is None
+                      else jnp.full(ql.shape, excl_zone, jnp.int32))
+                cout = sdtw_segment_topk(q, r_shard[0], ql, cin, j0,
+                                         m_total, metric, chunk, lo, hi,
+                                         top_k, ez, excl_span, track_start)
+            else:
+                cout = sdtw_segment(q, r_shard[0], ql, cin, j0, m_total,
+                                    metric, chunk, lo, hi)
+            nxt = jax.tree.map(lambda x: lax.ppermute(x, axis, perm), cout)
+            return nxt, cout
+
+        init = jax.tree.map(lambda x: jnp.zeros_like(x[0]), carry_in)
+        _, outs = lax.scan(tick, init, jnp.arange(ticks))
+
+        def harvest(o):
+            o = lax.dynamic_slice_in_dim(o, ndev - 1, n_micro, 0)
+            o = jnp.where(d == ndev - 1, o, jnp.zeros_like(o))
+            return lax.psum(o, axis)
+        return jax.tree.map(harvest, outs)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(), P(), P(), P(), P(), P(), P()),
+        out_specs=P(),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def sdtw_sharded_feed(r_macro, q_micro, qlen_micro, lo_micro, hi_micro,
+                      carry, j0: int, m_total: int, *, mesh: Mesh,
+                      axis: str = "ref", chunk: int, metric: str,
+                      top_k=None, excl_zone=None, excl_span: bool = False,
+                      track_start: bool = False):
+    """Advance stacked per-microbatch carries by one sharded macro-chunk.
+
+    ``r_macro`` is (ndev * seg,) with seg a multiple of ``chunk``; device d
+    processes global columns ``[j0 + d*seg, j0 + (d+1)*seg)``. ``carry``
+    leaves are (n_micro, mb, ...), as produced by a previous feed (or the
+    caller's stacked fresh init); the return value is the updated carry in
+    the same layout, replicated. ``m_total`` masks columns past the true
+    stream end, so a right-padded final macro-chunk still folds correct
+    distances/heaps (its exiting boundary column is garbage — a padded
+    feed must be the last, which is why the sharded session treats a tail
+    flush as terminal)."""
+    ndev = mesh.shape[axis]
+    n_micro = q_micro.shape[0]
+    seg = r_macro.shape[0] // ndev
+    if seg * ndev != r_macro.shape[0] or seg % chunk:
+        raise ValueError(
+            f"macro-chunk of {r_macro.shape[0]} does not split into "
+            f"{ndev} devices x multiple of chunk={chunk}")
+    run = _build_feed(mesh, axis, metric, chunk, ndev, n_micro,
+                      top_k, excl_zone, excl_span, track_start)
+    return run(r_macro.reshape(1, ndev * seg), q_micro, qlen_micro,
+               lo_micro, hi_micro, jnp.int32(m_total), jnp.int32(j0),
+               carry)
+
+
 def sdtw_sharded(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  mesh: Optional[Mesh] = None, axis: str = "ref",
                  chunk: int = 8192, n_micro: Optional[int] = None,

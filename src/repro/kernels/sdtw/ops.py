@@ -44,7 +44,8 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 ref_offset=0,
                 return_positions: bool = False,
                 return_spans: bool = False,
-                track_start: bool = False):
+                track_start: bool = False,
+                ref_len=None):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
     VMEM working set per grid cell ≈ block_q·(2·block_m + 3·N) accumulator
@@ -66,7 +67,12 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     carry returned by a previous call (``return_carry=True``) continues
     the recurrence as if the two reference slices had been one array.
     ``ref_offset`` is the global column index of ``reference[0]`` (traced;
-    no recompile per slice) so reported positions are global.
+    no recompile per slice) so reported positions are global. ``ref_len``
+    (traced, default the full array) marks only the first ``ref_len``
+    columns of ``reference`` as real: the kernel already masks columns
+    ≥ rlen and exits its carry at column ``rlen - 1``, so a streaming
+    caller can right-pad variable-size slices to one static shape and
+    still chain the carry exactly — no recompile per fed chunk length.
 
     With ``return_positions=True`` the primary result is a
     ``(dists (B,), end_positions (B,))`` pair; with ``return_spans=True``
@@ -114,7 +120,7 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     q_pad = jnp.zeros((bp, n), queries.dtype).at[:b].set(queries)
     r_pad = jnp.zeros((1, mp), reference.dtype).at[0, :m].set(reference)
     qlen_pad = jnp.ones((bp, 1), jnp.int32).at[:b, 0].set(qlens)
-    rlen = jnp.full((1, 1), m, jnp.int32)
+    rlen = jnp.full((1, 1), m if ref_len is None else ref_len, jnp.int32)
     off = jnp.full((1, 1), ref_offset, jnp.int32)
     bcol_pad = jnp.full((bp, n), BIG, acc).at[:b].set(bcol)
     best_pad = jnp.full((bp, 1), BIG, acc).at[:b, 0].set(best)

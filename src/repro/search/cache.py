@@ -31,17 +31,78 @@ class EnvelopeCache:
         self.misses = 0
 
     def envelope(self, reference, chunk: int, key=None):
-        """Cached ``chunk_envelope(reference, chunk)``."""
+        """Cached ``chunk_envelope(reference, chunk)``.
+
+        A cached entry only counts as a hit when its tile count matches
+        this reference's — a streamed entry that stopped mid-reference
+        (or was corrupted by a mis-keyed writer) must not gate pruning
+        over chunks it never saw; it is recomputed and replaced instead.
+        """
         full_key = (self._fingerprint(reference) if key is None else key,
                     int(chunk))
+        t = -(-int(reference.shape[0]) // int(chunk))
         hit = self._store.get(full_key)
-        if hit is not None:
+        if hit is not None and len(np.asarray(hit[0])) == t:
             self.hits += 1
             return hit
         self.misses += 1
         env = chunk_envelope(reference, chunk)
         self._store[full_key] = env
         return env
+
+    def extend(self, key, chunk: int, mins, maxs, at=None):
+        """Append per-chunk envelope rows under ``(key, chunk)``.
+
+        The streaming session calls this as reference chunks arrive, so
+        the envelope an offline ``search_topk`` against the materialized
+        reference would compute is already cached when the stream ends —
+        ``envelope()`` then hits instead of recomputing. ``mins``/``maxs``
+        are (t,) per-chunk values in chunk order (exactly what
+        ``chunk_envelope`` produces for those tiles). A streamed envelope
+        requires an explicit key: the fingerprint path needs the whole
+        array, which a stream never materializes.
+
+        ``at`` is the writer's global tile index for ``mins[0]``: when the
+        entry already holds ``at`` tiles the rows append; when it holds
+        *more*, another session already streamed this prefix and the rows
+        are dropped (idempotent re-streams — a second monitor on the same
+        key must not double the entry); when it holds *fewer* there is a
+        gap, and the entry is dropped entirely rather than left to serve
+        out-of-place bounds (``envelope()`` recomputes on demand).
+        """
+        if key is None:
+            raise ValueError("extend() requires an explicit key — a stream "
+                             "has no materialized array to fingerprint")
+        full_key = (key, int(chunk))
+        mins = np.asarray(mins)
+        maxs = np.asarray(maxs)
+        cur = self._store.get(full_key)
+        cur_len = 0 if cur is None else len(np.asarray(cur[0]))
+        if at is not None:
+            if cur_len > int(at):
+                return                     # prefix already present
+            if cur_len < int(at):
+                self._store.pop(full_key, None)   # gap — drop, recompute
+                return
+        if cur is not None:
+            mins = np.concatenate([np.asarray(cur[0]), mins])
+            maxs = np.concatenate([np.asarray(cur[1]), maxs])
+        self._store[full_key] = (mins, maxs)
+
+    def peek(self, key, chunk: int):
+        """The cached entry under ``(key, chunk)``, or None — does not
+        compute and does not count as a hit/miss."""
+        return self._store.get((key, int(chunk)))
+
+    def put(self, key, chunk: int, mins, maxs):
+        """Install an envelope wholesale under ``(key, chunk)``, replacing
+        any partial entry — the restore path of a streamed session, whose
+        snapshot carries the authoritative prefix (a fresh cache in a new
+        process must not be *extended* from mid-stream)."""
+        if key is None:
+            raise ValueError("put() requires an explicit key")
+        self._store[(key, int(chunk))] = (np.asarray(mins),
+                                          np.asarray(maxs))
 
     def clear(self):
         self._store.clear()

@@ -1,0 +1,17 @@
+"""Online sDTW monitoring over the chunk-carry protocol.
+
+``StreamSession`` consumes the reference as an unbounded chunk sequence,
+advancing every query's DP carry through the same rowscan / Pallas chunk
+paths the offline engine runs — distances, spans and top-K matches are
+bitwise-identical to ``engine.sdtw`` for any feed partition.
+``ShardedStreamSession`` feeds per-device chunk streams through the
+ppermute systolic carry. ``engine.stream()`` is the front door.
+"""
+from .session import (DEFAULT_STREAM_CHUNK, AlertEvent, StreamResult,
+                      StreamSession)
+from .sharded import ShardedStreamSession
+
+__all__ = [
+    "StreamSession", "ShardedStreamSession", "StreamResult", "AlertEvent",
+    "DEFAULT_STREAM_CHUNK",
+]

@@ -1,0 +1,304 @@
+"""Sharded streaming: per-device chunk streams through the ppermute carry.
+
+A ``ShardedStreamSession`` is the multi-device sibling of
+``StreamSession``: fed reference samples are buffered into *macro-chunks*
+of ``ndev * chunk`` samples, each macro-chunk is split across the mesh
+(device d owns its contiguous ``chunk``-sized slice), and the chunk carry
+— boundary column, start lane, running best, top-K heap — crosses devices
+inside the same ``lax.ppermute`` systolic pipeline the offline sharded
+driver uses (``repro.distributed.sdtw_sharded``). Between feeds the
+harvested per-microbatch carries live with the session, so an unbounded
+reference streams through a fixed 8-device pipeline in bounded memory.
+
+Because device order equals reference order and every device advances its
+slice in the same ``chunk`` tiles, the heap-merge partition is identical
+to a single-process ``StreamSession(chunk=chunk)`` — §11 of
+``tests/_distributed_check.py`` asserts the two are bitwise-equal in both
+exclusion modes.
+
+The final partial macro-chunk is right-padded and masked via the DP's
+global-position ban: folded distances/spans/heaps stay exact, but the
+exiting boundary column is poisoned by the pad, so ``flush()`` finalizes
+the session (unlike the single-process session, whose per-tile ``clen``
+boundary extraction keeps a flushed stream alive)."""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import accum_dtype
+from repro.core.sdtw import sdtw_carry_init
+from repro.core.topk import topk_init
+from repro.distributed.sdtw_sharded import default_mesh, sdtw_sharded_feed
+
+from .session import DEFAULT_STREAM_CHUNK, StreamResult, _SNAP_VERSION
+
+
+class ShardedStreamSession:
+    """Online sDTW monitor with the arriving reference sharded across a
+    mesh axis. Padded 2-D query batches only (bucket ragged sets into
+    separate sessions); no pruning (the LB cascade is host-side) and no
+    alert callbacks (the candidate row never leaves the devices)."""
+
+    def __init__(self, queries, *, qlens=None, metric: str = "abs_diff",
+                 mesh=None, axis: str = "ref",
+                 chunk: Optional[int] = None, n_micro: Optional[int] = None,
+                 top_k: Optional[int] = None, excl_zone=None,
+                 excl_mode: str = "end", return_spans: bool = False,
+                 return_positions: bool = False,
+                 excl_lo=None, excl_hi=None):
+        if isinstance(queries, (list, tuple)):
+            raise ValueError("sharded sessions take a padded 2-D batch; "
+                             "bucket ragged query sets into separate "
+                             "sessions")
+        if excl_mode not in ("end", "span"):
+            raise ValueError(f"excl_mode must be 'end' or 'span', got "
+                             f"{excl_mode!r}")
+        if excl_zone is not None and np.ndim(excl_zone) != 0:
+            raise ValueError("sharded sessions take a scalar excl_zone "
+                             "(or None for the per-query default)")
+        self.mesh = default_mesh(axis) if mesh is None else mesh
+        self.axis = axis
+        self.ndev = self.mesh.shape[axis]
+        self.metric = metric
+        self.chunk = int(DEFAULT_STREAM_CHUNK if chunk is None else chunk)
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        self.macro = self.ndev * self.chunk
+        self.top_k = top_k
+        self.excl_mode = excl_mode
+        self.return_spans = bool(return_spans)
+        self.return_positions = bool(return_positions)
+
+        queries = jnp.asarray(queries)
+        single = queries.ndim == 1
+        if single:
+            queries = queries[None, :]
+        self._single = single
+        nq, n = queries.shape
+        self._nq, self._n = nq, n
+        if qlens is None:
+            qlens = jnp.full((nq,), n, jnp.int32)
+        else:
+            qlens = jnp.asarray(qlens, jnp.int32)
+        lo = (jnp.full((nq,), -1, jnp.int32) if excl_lo is None
+              else jnp.broadcast_to(jnp.asarray(excl_lo, jnp.int32), (nq,)))
+        hi = (jnp.full((nq,), -1, jnp.int32) if excl_hi is None
+              else jnp.broadcast_to(jnp.asarray(excl_hi, jnp.int32), (nq,)))
+
+        # Microbatch layout — identical to the offline sharded driver.
+        n_micro = self.ndev if n_micro is None else max(1, n_micro)
+        n_micro = min(n_micro, max(1, nq))
+        mb = -(-nq // n_micro)
+        pad_q = n_micro * mb - nq
+        self.n_micro, self.mb = n_micro, mb
+        self._q_micro = jnp.pad(queries, ((0, pad_q), (0, 0))).reshape(
+            n_micro, mb, n)
+        self._ql_micro = jnp.pad(qlens, (0, pad_q),
+                                 constant_values=1).reshape(n_micro, mb)
+        self._lo_micro = jnp.pad(lo, (0, pad_q),
+                                 constant_values=-1).reshape(n_micro, mb)
+        self._hi_micro = jnp.pad(hi, (0, pad_q),
+                                 constant_values=-1).reshape(n_micro, mb)
+
+        self._derive_modes()
+        # zone pinning mirrors sdtw_sharded: None derives per query in the
+        # pipeline body (half true length; 0 in span mode).
+        if not self._wants_heap:
+            self._zone = 0
+        elif excl_zone is not None:
+            self._zone = int(excl_zone)
+        else:
+            self._zone = None if excl_mode == "end" else 0
+
+        self._carry = None           # built on first feed (needs dtype)
+        self._buf = np.zeros((0,), np.int32)
+        self._dtype = None
+        self._offset = 0
+        self._finalized = False
+        self.tiles_total = 0
+
+    def _derive_modes(self):
+        """Mode lattice shared by ``__init__`` and ``restore()`` — one
+        derivation, so a restored session unpacks the harvested carries
+        under the layout that wrote them."""
+        self._wants_heap = (self.top_k is not None or self.return_spans
+                            or self.return_positions)
+        self._k = 1 if self.top_k is None else self.top_k
+        self._track = self.return_spans or self.excl_mode == "span"
+
+    def _fresh_carry(self, ref_dtype):
+        acc = accum_dtype(jnp.result_type(
+            np.asarray(self._q_micro).dtype, ref_dtype))
+        fresh = sdtw_carry_init(self.mb, self._n, acc,
+                                track_start=self._wants_heap and
+                                self._track)
+        if self._wants_heap:
+            fresh = fresh + topk_init(self.mb, self._k, acc)
+        return tuple(jnp.broadcast_to(x, (self.n_micro,) + x.shape)
+                     for x in fresh)
+
+    @property
+    def samples_seen(self) -> int:
+        return self._offset + int(self._buf.shape[0])
+
+    def feed(self, data) -> "ShardedStreamSession":
+        """Append reference samples; advance by every whole macro-chunk."""
+        if self._finalized:
+            raise RuntimeError("session is finalized (a sharded flush is "
+                               "terminal — the padded macro-chunk poisons "
+                               "the exiting boundary column)")
+        data = np.asarray(data)
+        if data.ndim != 1:
+            raise ValueError(f"feed() takes a 1-D chunk, got {data.shape}")
+        if data.shape[0] == 0:
+            return self
+        if self._dtype is None:
+            self._dtype = data.dtype
+            self._buf = np.zeros((0,), data.dtype)
+            self._carry = self._fresh_carry(data.dtype)
+        elif data.dtype != self._dtype:
+            raise ValueError(f"stream dtype changed mid-flight: "
+                             f"{self._dtype} -> {data.dtype}")
+        self._buf = np.concatenate([self._buf, data])
+        while self._buf.shape[0] >= self.macro:
+            macro, self._buf = (self._buf[:self.macro],
+                                self._buf[self.macro:])
+            self._carry = self._advance(self._carry, macro, self.macro)
+            self._offset += self.macro
+            self.tiles_total += self.ndev
+        return self
+
+    def flush(self) -> "ShardedStreamSession":
+        """Push the buffered tail through as a padded, masked macro-chunk.
+
+        Terminal: distances/spans/heap fold exactly, the boundary column
+        does not survive the pad."""
+        if self._buf.shape[0]:
+            tail, self._buf = self._buf, self._buf[:0]
+            self._carry = self._advance(self._carry, tail,
+                                        int(tail.shape[0]))
+            self._offset += int(tail.shape[0])
+            self.tiles_total += -(-int(tail.shape[0]) // self.chunk)
+            self._finalized = True
+        return self
+
+    def _advance(self, carry, chunk_np: np.ndarray, clen: int):
+        padded = np.zeros((self.macro,), chunk_np.dtype)
+        padded[:clen] = chunk_np[:clen]
+        return sdtw_sharded_feed(
+            jnp.asarray(padded), self._q_micro, self._ql_micro,
+            self._lo_micro, self._hi_micro, carry,
+            self._offset, self._offset + clen, mesh=self.mesh,
+            axis=self.axis, chunk=self.chunk, metric=self.metric,
+            top_k=self._k if self._wants_heap else None,
+            excl_zone=self._zone, excl_span=self.excl_mode == "span",
+            track_start=self._track)
+
+    def results(self) -> StreamResult:
+        """Current match state; non-destructive — a buffered tail is
+        applied to a copy of the carry."""
+        carry = self._carry
+        if carry is not None and self._buf.shape[0]:
+            carry = self._advance(carry, self._buf, int(self._buf.shape[0]))
+        kk = self._k
+        flat = self.n_micro * self.mb
+        if carry is None:
+            d = np.full((flat, kk), np.inf)
+            p = np.full((flat, kk), -1, np.int32)
+            s = np.full((flat, kk), -1, np.int32)
+        elif self._wants_heap:
+            d, p, s = (np.asarray(x).reshape(flat, kk) for x in carry[-3:])
+        else:
+            d = np.asarray(carry[-1]).reshape(flat, 1)
+            p = s = np.full((flat, 1), -1, np.int32)
+        d, p, s = d[:self._nq], p[:self._nq], s[:self._nq]
+        if self.top_k is None:
+            d, p, s = d[:, 0], p[:, 0], s[:, 0]
+        if self._single:
+            d, p, s = d[0], p[0], s[0]
+        wants_pos = self._wants_heap and (
+            self.top_k is not None or self.return_positions
+            or self.return_spans)
+        return StreamResult(
+            distances=d,
+            positions=p if wants_pos else None,
+            starts=s if (wants_pos and self._track) else None,
+            samples=self.samples_seen,
+            tiles_total=self.tiles_total,
+            tiles_processed=self.tiles_total)
+
+    # ------------------------------------------------------------------
+    # snapshot / restore
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Flat numpy dict (``np.savez``-ready); ``restore()`` rebuilds
+        against the same (or an equally-shaped) mesh."""
+        meta = dict(
+            version=_SNAP_VERSION, kind="sharded", metric=self.metric,
+            axis=self.axis, ndev=self.ndev, chunk=self.chunk,
+            n_micro=self.n_micro, mb=self.mb, nq=self._nq, n=self._n,
+            single=self._single, top_k=self.top_k,
+            excl_mode=self.excl_mode, return_spans=self.return_spans,
+            return_positions=self.return_positions,
+            zone=self._zone, offset=self._offset,
+            finalized=self._finalized, tiles_total=self.tiles_total,
+            dtype=None if self._dtype is None else np.dtype(
+                self._dtype).name,
+            carry_len=0 if self._carry is None else len(self._carry))
+        snap = {"meta": np.array(json.dumps(meta)),
+                "buffer": np.asarray(self._buf),
+                "q_micro": np.asarray(self._q_micro),
+                "ql_micro": np.asarray(self._ql_micro),
+                "lo_micro": np.asarray(self._lo_micro),
+                "hi_micro": np.asarray(self._hi_micro)}
+        if self._carry is not None:
+            for ci, leaf in enumerate(self._carry):
+                snap[f"carry{ci}"] = np.asarray(leaf)
+        return snap
+
+    @classmethod
+    def restore(cls, snap, *, mesh=None) -> "ShardedStreamSession":
+        meta = json.loads(str(np.asarray(snap["meta"])[()]))
+        if meta.get("kind") != "sharded":
+            raise ValueError("not a sharded-session snapshot")
+        if meta["version"] != _SNAP_VERSION:
+            raise ValueError(f"snapshot version {meta['version']} not "
+                             f"supported")
+        self = cls.__new__(cls)
+        self.mesh = default_mesh(meta["axis"]) if mesh is None else mesh
+        self.axis = meta["axis"]
+        self.ndev = self.mesh.shape[self.axis]
+        if self.ndev != meta["ndev"]:
+            raise ValueError(f"snapshot was taken on {meta['ndev']} "
+                             f"devices, mesh has {self.ndev}")
+        self.metric = meta["metric"]
+        self.chunk = meta["chunk"]
+        self.macro = self.ndev * self.chunk
+        self.top_k = meta["top_k"]
+        self.excl_mode = meta["excl_mode"]
+        self.return_spans = meta["return_spans"]
+        self.return_positions = meta["return_positions"]
+        self.n_micro, self.mb = meta["n_micro"], meta["mb"]
+        self._nq, self._n = meta["nq"], meta["n"]
+        self._single = meta["single"]
+        self._derive_modes()
+        self._zone = meta["zone"]
+        self._offset = meta["offset"]
+        self._finalized = meta["finalized"]
+        self.tiles_total = meta["tiles_total"]
+        self._dtype = (None if meta["dtype"] is None
+                       else np.dtype(meta["dtype"]))
+        self._buf = np.asarray(snap["buffer"])
+        self._q_micro = jnp.asarray(snap["q_micro"])
+        self._ql_micro = jnp.asarray(snap["ql_micro"])
+        self._lo_micro = jnp.asarray(snap["lo_micro"])
+        self._hi_micro = jnp.asarray(snap["hi_micro"])
+        self._carry = (tuple(jnp.asarray(snap[f"carry{ci}"])
+                             for ci in range(meta["carry_len"]))
+                       if meta["carry_len"] else None)
+        return self

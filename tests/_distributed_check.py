@@ -13,6 +13,9 @@ Asserts:
   9. sharded top-K heap == single-process streamer bitwise
   10. sharded spans + top-K span heap (start-pointer lane through the
       ppermute carry) == single-process bitwise, both suppression modes
+  11. sharded streaming session (per-device chunk streams through the
+      ppermute carry, carries handed back between feeds) == single-process
+      StreamSession bitwise, both suppression modes + snapshot/restore
 """
 import os
 
@@ -226,5 +229,61 @@ for mode in ("end", "span"):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 print("10 OK: sharded spans + top-K span heap (start lane through the "
       "ppermute carry) match single-process bitwise")
+
+# --- 11. sharded streaming session == single-process StreamSession --------
+from repro.core import stream as open_stream
+from repro.stream import ShardedStreamSession
+
+qs11 = rng8.integers(-8, 8, (8, 6)).astype(np.int32)   # tie-heavy range
+r11 = rng8.integers(-8, 8, 97).astype(np.int32)
+
+# Plain distance lane: 8-device feed == single-process feed == offline.
+sh11 = open_stream(qs11, mesh=ref_mesh, chunk=4)       # macro-chunk = 32
+sp11 = open_stream(qs11, chunk=4)
+for off in range(0, 97, 17):
+    sh11.feed(r11[off:off + 17])
+    sp11.feed(r11[off:off + 17])
+np.testing.assert_array_equal(np.asarray(sh11.results().distances),
+                              np.asarray(sp11.results().distances))
+np.testing.assert_array_equal(
+    np.asarray(sh11.results().distances),
+    np.asarray(engine_sdtw(jnp.asarray(qs11), jnp.asarray(r11), chunk=4,
+                           impl="chunked")))
+
+# Top-K + spans, both suppression modes, arbitrary feed partition.
+for mode in ("end", "span"):
+    sh = open_stream(qs11, mesh=ref_mesh, chunk=4, top_k=3, excl_zone=4,
+                     excl_mode=mode, return_spans=True)
+    sp = open_stream(qs11, chunk=4, top_k=3, excl_zone=4, excl_mode=mode,
+                     return_spans=True)
+    for off in range(0, 97, 13):
+        sh.feed(r11[off:off + 13])
+        sp.feed(r11[off:off + 13])
+    a, b = sh.results(), sp.results()
+    for x, y in ((a.distances, b.distances), (a.starts, b.starts),
+                 (a.positions, b.positions)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"mode={mode}")
+    tk = sdtw_chunked(jnp.asarray(qs11), jnp.asarray(r11), chunk=4,
+                      top_k=3, excl_zone=4, excl_mode=mode,
+                      return_spans=True)
+    np.testing.assert_array_equal(np.asarray(a.distances),
+                                  np.asarray(tk[0]))
+    np.testing.assert_array_equal(np.asarray(a.starts), np.asarray(tk[1]))
+    np.testing.assert_array_equal(np.asarray(a.positions),
+                                  np.asarray(tk[2]))
+
+# Snapshot mid-stream, restore, keep feeding: bitwise-identical tail.
+sh = open_stream(qs11, mesh=ref_mesh, chunk=4, top_k=3, return_spans=True)
+sh.feed(r11[:64])
+sh2 = ShardedStreamSession.restore(sh.snapshot(), mesh=ref_mesh)
+sh.feed(r11[64:])
+sh2.feed(r11[64:])
+a, b = sh.results(), sh2.results()
+for x, y in ((a.distances, b.distances), (a.starts, b.starts),
+             (a.positions, b.positions)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("11 OK: sharded stream feed (ppermute carry handed back between "
+      "feeds) matches single-process session bitwise, both modes")
 
 print("DISTRIBUTED_ALL_OK")

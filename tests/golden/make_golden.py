@@ -1,11 +1,15 @@
 """Golden span/distance fixture generator.
 
 ``compute()`` produces every fixture array from a fixed seed; running this
-file writes them to ``sdtw_spans_v1.npz``. The committed ``.npz`` is
-asserted *bitwise* in CI (``test_spans_paths.py::test_golden_spans_bitwise``)
-so silent numeric drift across jax/XLA upgrades — the class of breakage
-PR 1 repaired — fails loudly instead of shipping. Regenerate only when the
-engine's semantics intentionally change, and say why in the commit.
+file writes them to ``sdtw_spans_v1.npz``. ``compute_stream()`` does the
+same for the streaming subsystem (``sdtw_stream_v1.npz``): distances,
+spans, top-K heaps and pruned-stream heaps produced by feeding a fixed
+partition through ``engine.stream``. The committed ``.npz`` files are
+asserted *bitwise* in CI (``test_spans_paths.py::test_golden_spans_bitwise``,
+``test_stream.py::test_golden_stream_bitwise``) so silent numeric drift
+across jax/XLA upgrades — the class of breakage PR 1 repaired — fails
+loudly instead of shipping. Regenerate only when the engine's semantics
+intentionally change, and say why in the commit.
 
 Run:  PYTHONPATH=src python tests/golden/make_golden.py
 """
@@ -15,6 +19,11 @@ import numpy as np
 
 SEED = 20260731
 OUT = pathlib.Path(__file__).parent / "sdtw_spans_v1.npz"
+STREAM_OUT = pathlib.Path(__file__).parent / "sdtw_stream_v1.npz"
+
+#: The fixed feed partition of the 257-sample golden reference — mixed
+#: tiny/aligned/unaligned chunks so the fixture exercises the buffering.
+STREAM_PARTS = (37, 1, 64, 100, 55)
 
 
 def compute():
@@ -48,7 +57,60 @@ def compute():
     return out
 
 
+def compute_stream():
+    import jax.numpy as jnp
+
+    from repro.core import stream
+    from repro.core.sdtw import sdtw_chunked
+
+    rng = np.random.default_rng(SEED)
+    out = {}
+    for dtype, tag in ((np.int32, "i32"), (np.float32, "f32")):
+        q = rng.integers(-40, 40, (4, 10)).astype(dtype)
+        r = rng.integers(-40, 40, 257).astype(dtype)
+        out[f"{tag}_queries"] = q
+        out[f"{tag}_reference"] = r
+
+        def run(**kw):
+            s = stream(q, chunk=32, **kw)
+            off = 0
+            for p in STREAM_PARTS:
+                s.feed(r[off:off + p])
+                off += p
+            return s.results()
+
+        res = run(return_spans=True)
+        out[f"{tag}_dists"] = np.asarray(res.distances)
+        out[f"{tag}_starts"] = np.asarray(res.starts)
+        out[f"{tag}_ends"] = np.asarray(res.positions)
+        for mode in ("end", "span"):
+            res = run(top_k=3, excl_zone=5, excl_mode=mode,
+                      return_spans=True)
+            out[f"{tag}_topk_{mode}_dists"] = np.asarray(res.distances)
+            out[f"{tag}_topk_{mode}_starts"] = np.asarray(res.starts)
+            out[f"{tag}_topk_{mode}_ends"] = np.asarray(res.positions)
+        res = run(top_k=3, excl_zone=5, prune=True, return_spans=True)
+        out[f"{tag}_pruned_dists"] = np.asarray(res.distances)
+        out[f"{tag}_pruned_starts"] = np.asarray(res.starts)
+        out[f"{tag}_pruned_ends"] = np.asarray(res.positions)
+        # Offline cross-check baked into the fixture: the streamed heap is
+        # the chunked engine's heap (same tile size), recorded once here so
+        # a drifting offline path cannot silently drag the fixture along.
+        kd, ks, ke = sdtw_chunked(jnp.asarray(q), jnp.asarray(r), chunk=32,
+                                  top_k=3, excl_zone=5, return_spans=True)
+        assert np.array_equal(np.asarray(kd),
+                              out[f"{tag}_topk_end_dists"])
+        assert np.array_equal(np.asarray(ks),
+                              out[f"{tag}_topk_end_starts"])
+        assert np.array_equal(np.asarray(ke),
+                              out[f"{tag}_topk_end_ends"])
+    return out
+
+
 if __name__ == "__main__":
     arrays = compute()
     np.savez(OUT, **arrays)
     print(f"wrote {OUT} ({len(arrays)} arrays)")
+    arrays = compute_stream()
+    np.savez(STREAM_OUT, **arrays)
+    print(f"wrote {STREAM_OUT} ({len(arrays)} arrays)")

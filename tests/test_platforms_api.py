@@ -1,0 +1,148 @@
+"""Seed-module coverage: ``repro.core.platforms`` and
+``repro.core.matsa_api`` — the two modules that shipped with zero tests.
+
+The platform models are analytic (cells/s + watts), so their sanity
+properties are sharp: strictly positive costs, exact linearity in every
+workload dimension, utilization inside (0, 1]. The matsa() host API is
+checked against the engine it routes through and the numpy oracle.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (PLATFORMS, Workload, load_real_workload_shapes,
+                        matsa, sdtw, synthetic_timeseries)
+from repro.core.platforms import PlatformModel
+from repro.core.sdtw_ref import sdtw_ref
+
+W0 = Workload(ref_size=10_000, query_size=100, num_queries=64)
+
+
+# ---------------------------------------------------------------------------
+# PlatformModel sanity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PLATFORMS))
+def test_platform_costs_positive_and_consistent(name):
+    p = PLATFORMS[name]
+    t = p.exec_time_s(W0)
+    e = p.energy_j(W0)
+    assert t > 0 and e > 0
+    assert np.isclose(e, t * p.watts)
+    cells = W0.num_queries * W0.query_size * W0.ref_size
+    assert np.isclose(p.energy_per_cell_j() * cells, e)
+
+
+@pytest.mark.parametrize("name", sorted(PLATFORMS))
+def test_platform_utilization_sane(name):
+    """Sustained throughput stays at or below peak — every baseline is a
+    real machine under its roofline (§II-D). UPMEM is modeled
+    compute-bound *at* its DPU peak, so its rounded constants land at
+    ~1.06 rather than exactly 1; everyone else sits far below."""
+    u = PLATFORMS[name].utilization()
+    if name == "upmem":
+        assert 0.9 < u < 1.1, u
+    else:
+        assert 0 < u <= 0.1, (name, u)
+
+
+@pytest.mark.parametrize("name", sorted(PLATFORMS))
+@pytest.mark.parametrize("dim", ["ref_size", "query_size", "num_queries"])
+def test_platform_monotone_in_workload(name, dim):
+    """Cost is (exactly) linear in each workload dimension — doubling
+    work doubles time and energy, and never less."""
+    import dataclasses
+    p = PLATFORMS[name]
+    w2 = dataclasses.replace(W0, **{dim: getattr(W0, dim) * 2})
+    assert p.exec_time_s(w2) >= p.exec_time_s(W0)
+    assert np.isclose(p.exec_time_s(w2), 2 * p.exec_time_s(W0))
+    assert np.isclose(p.energy_j(w2), 2 * p.energy_j(W0))
+
+
+def test_upmem_energy_beats_gpu():
+    """The calibration constraint baked into platforms.py: UPMEM energy =
+    0.63x GPU (§II-D's measured 37% reduction)."""
+    ratio = (PLATFORMS["upmem"].energy_per_cell_j()
+             / PLATFORMS["gpu"].energy_per_cell_j())
+    assert abs(ratio - 0.63) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# matsa() host API
+# ---------------------------------------------------------------------------
+
+def test_matsa_query_filtering_matches_engine(rng):
+    q = rng.integers(-40, 40, (4, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 64).astype(np.int32)
+    res = matsa(r, q)
+    want = sdtw(jnp.asarray(q), jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(res.distances),
+                                  np.asarray(want))
+    assert res.anomalies is None and res.window_starts is None
+
+
+def test_matsa_ragged_query_sizes_match_oracle(rng):
+    q = rng.integers(-20, 20, (3, 10)).astype(np.int32)
+    sizes = np.asarray([4, 10, 7])
+    r = rng.integers(-20, 20, 50).astype(np.int32)
+    res = matsa(r, q, query_sizes=sizes)
+    want = np.asarray([sdtw_ref(q[i, :sizes[i]], r) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(res.distances), want)
+
+
+def test_matsa_anomaly_threshold(rng):
+    q = rng.integers(-40, 40, (6, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 64).astype(np.int32)
+    res = matsa(r, q, anomaly_threshold=0)
+    d = np.asarray(res.distances)
+    thr = int(np.median(d))
+    res = matsa(r, q, anomaly_threshold=thr)
+    np.testing.assert_array_equal(np.asarray(res.anomalies), d > thr)
+    assert np.asarray(res.anomalies).dtype == bool
+
+
+def test_matsa_self_join_exclusion(rng):
+    r = rng.integers(-1000, 1000, 48).astype(np.int32)
+    free = matsa(r, mode="self_join", window=8, stride=4, exclusion=False)
+    # without the exclusion zone every window matches itself at cost 0
+    np.testing.assert_array_equal(np.asarray(free.distances),
+                                  np.zeros_like(free.distances))
+    excl = matsa(r, mode="self_join", window=8, stride=4)
+    assert free.distances.shape == excl.distances.shape
+    assert np.all(np.asarray(excl.distances)
+                  >= np.asarray(free.distances))
+    np.testing.assert_array_equal(np.asarray(excl.window_starts),
+                                  np.arange(0, 41, 4))
+
+
+def test_matsa_argument_errors(rng):
+    r = rng.integers(-5, 5, 32).astype(np.int32)
+    with pytest.raises(ValueError, match="mode"):
+        matsa(r, mode="nope")
+    with pytest.raises(ValueError, match="window"):
+        matsa(r, mode="self_join")
+    with pytest.raises(ValueError, match="queries"):
+        matsa(r, mode="query_filtering")
+
+
+def test_load_real_workload_shapes_table5():
+    shapes = load_real_workload_shapes()
+    assert set(shapes) == {"Human", "Song", "Penguin", "Seismology",
+                           "Power", "ECG"}
+    ecg = shapes["ECG"]
+    assert ecg["ref_size"] == 1_800_000 and ecg["query_size"] == 512
+    for s in shapes.values():
+        assert s["ref_size"] > 0 and s["query_size"] > 0
+        assert s["num_queries"] > 0
+
+
+def test_synthetic_timeseries_deterministic():
+    a = synthetic_timeseries(np.random.default_rng(5), 512,
+                             anomaly_rate=0.1)
+    b = synthetic_timeseries(np.random.default_rng(5), 512,
+                             anomaly_rate=0.1)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int32 and a.shape == (512,)
+    f = synthetic_timeseries(np.random.default_rng(5), 64, dtype=np.float32)
+    assert f.dtype == np.float32

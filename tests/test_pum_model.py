@@ -2,7 +2,6 @@
 Key Observations 3-6, endurance)."""
 import statistics
 
-import numpy as np
 import pytest
 
 from repro.core import (PAPER_TABLE6, PLATFORMS, VERSIONS, MramParams,
@@ -91,3 +90,80 @@ def test_work_conserving_vs_granular():
     wc = simulate(w, 1_048_576, work_conserving=True)
     gr = simulate(w, 1_048_576, work_conserving=False)
     assert wc.exec_time_s < gr.exec_time_s
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis monotonicity properties — the simulator's partial order.
+# ---------------------------------------------------------------------------
+
+def test_cost_monotone_in_workload_dimensions():
+    """Growing any of W (operand width), M (ref_size), n_q (num_queries)
+    — or the query size — never decreases time or energy."""
+    pytest.importorskip("hypothesis")
+    import dataclasses
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.integers(64, 1 << 21), n=st.integers(8, 4096),
+           nq=st.integers(1, 1 << 15), scale=st.integers(2, 8),
+           cols=st.sampled_from([32768, 131072, 1048576]),
+           dim=st.sampled_from(["ref_size", "query_size", "num_queries"]),
+           conserving=st.booleans())
+    def prop(m, n, nq, scale, cols, dim, conserving):
+        w = Workload(m, n, nq)
+        base = simulate(w, cols, work_conserving=conserving)
+        w2 = dataclasses.replace(w, **{dim: getattr(w, dim) * scale})
+        grown = simulate(w2, cols, work_conserving=conserving)
+        assert grown.exec_time_s >= base.exec_time_s, (dim, w)
+        assert grown.energy_j >= base.energy_j, (dim, w)
+        # width monotonicity enters through the per-cell op counts
+        wide = simulate(dataclasses.replace(w, width=64), cols)
+        narrow = simulate(dataclasses.replace(w, width=16), cols)
+        assert wide.exec_time_s >= narrow.exec_time_s
+
+    prop()
+
+
+def test_replication_never_hurts():
+    """Reference replication (§III-D: R = C // M spare-column copies, so
+    it exists when the reference fits the columns) never slows a workload
+    down, never changes its energy, and the work-conserving repacking
+    never loses to the ceil-granular schedule.
+
+    The m <= cols guard is load-bearing: for C < M < 2C doubling the
+    columns grows the pipeline-fill term (min(M, C) - 1) by up to C while
+    the compute term shrinks by ~cells/2C, so fill-dominated workloads
+    can get *slower* — that regime has no replication at all (R = 0), so
+    it is outside the claim. The compute steps alone are monotone
+    unconditionally, asserted separately."""
+    pytest.importorskip("hypothesis")
+    import math
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(m=st.integers(64, 1 << 18), n=st.integers(8, 4096),
+           nq=st.integers(1, 1 << 15),
+           cols=st.sampled_from([262144, 1048576]),
+           conserving=st.booleans())
+    def prop(m, n, nq, cols, conserving):
+        w = Workload(m, n, nq)      # m <= 2^18 <= cols: replication regime
+        small = simulate(w, cols, work_conserving=conserving)
+        doubled = simulate(w, 2 * cols, work_conserving=conserving)
+        assert doubled.exec_time_s <= small.exec_time_s, w
+        assert doubled.energy_j == small.energy_j     # same cells
+        # Steady-state compute steps are monotone for every shape.
+        fill_s = min(m, cols) - 1
+        fill_d = min(m, 2 * cols) - 1
+        assert (doubled.macro_steps - fill_d
+                <= small.macro_steps - fill_s)
+        assert doubled.macro_steps - fill_d >= math.ceil(
+            w.num_queries * w.query_size * w.ref_size / (2 * cols))
+        wc = simulate(w, cols, work_conserving=True)
+        gr = simulate(w, cols, work_conserving=False)
+        assert wc.exec_time_s <= gr.exec_time_s, w
+
+    prop()

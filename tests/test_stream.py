@@ -1,0 +1,455 @@
+"""Stream-vs-batch differential tests: any chunking of the reference fed
+through a ``StreamSession`` must reproduce the offline engine bitwise.
+
+The invariant under test is the acceptance bar of the streaming subsystem:
+``engine.stream(...)`` fed an arbitrary partition of the reference equals
+``engine.sdtw(..., return_spans=True)`` / ``search_topk`` on the
+materialized array — distances, spans, and top-K heaps, bitwise for
+int32 — including ragged query batches, prune on/off, mid-stream
+snapshot/restore, non-destructive polling, and the Pallas feed path.
+The 8-device sharded session is §11 of ``_distributed_check.py``.
+"""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sdtw, stream
+from repro.core.sdtw import sdtw_chunked
+from repro.search import EnvelopeCache, chunk_envelope, search_topk
+from repro.stream import AlertEvent, StreamSession
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "sdtw_stream_v1.npz"
+
+
+def _feed(session, reference, parts):
+    off = 0
+    for p in parts:
+        session.feed(np.asarray(reference)[off:off + p])
+        off += p
+    assert off == len(reference)
+    return session
+
+
+#: Partitions of a 257-sample reference that stress every boundary case:
+#: one shot, tile-aligned, single samples, tiny head, unaligned runs.
+PARTITIONS_257 = [[257], [32] * 8 + [1], [1] * 257, [3, 254],
+                  [100, 100, 57], [64, 1, 64, 1, 127]]
+
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_stream_spans_match_engine_any_partition(metric, dtype, rng):
+    """Distances/starts/ends equal the offline engine bitwise for every
+    partition (integer-valued float32 is exact, so bitwise there too)."""
+    q = rng.integers(-40, 40, (4, 10)).astype(dtype)
+    r = rng.integers(-40, 40, 257).astype(dtype)
+    want = sdtw(jnp.asarray(q), jnp.asarray(r), metric=metric,
+                return_spans=True)
+    want = tuple(np.asarray(x) for x in want)
+    for parts in PARTITIONS_257:
+        s = _feed(stream(q, metric=metric, chunk=32, return_spans=True),
+                  r, parts)
+        res = s.results()
+        got = (np.asarray(res.distances), np.asarray(res.starts),
+               np.asarray(res.positions))
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b, err_msg=str(parts[:3]))
+
+
+@pytest.mark.parametrize("excl_mode", ["end", "span"])
+def test_stream_topk_matches_offline(excl_mode, rng):
+    """The streamed heap equals the offline chunked top-K (and
+    ``search_topk(prune=False)``) bitwise, both suppression modes."""
+    q = rng.integers(-8, 8, (3, 8)).astype(np.int32)   # tie-heavy range
+    r = rng.integers(-8, 8, 257).astype(np.int32)
+    want = sdtw_chunked(jnp.asarray(q), jnp.asarray(r), chunk=32, top_k=3,
+                        excl_zone=4, excl_mode=excl_mode, return_spans=True)
+    wd, ws, we = (np.asarray(x) for x in want)
+    sr = search_topk(q, r, k=3, chunk=32, excl_zone=4, excl_mode=excl_mode,
+                     prune=False)
+    np.testing.assert_array_equal(np.asarray(sr.distances), wd)
+    for parts in ([257], [13] * 19 + [10], [200, 57]):
+        s = _feed(stream(q, chunk=32, top_k=3, excl_zone=4,
+                         excl_mode=excl_mode, return_spans=True), r, parts)
+        res = s.results()
+        np.testing.assert_array_equal(np.asarray(res.distances), wd)
+        np.testing.assert_array_equal(np.asarray(res.starts), ws)
+        np.testing.assert_array_equal(np.asarray(res.positions), we)
+
+
+def test_stream_results_polling_is_nondestructive(rng):
+    """results() applies the buffered tail to a *copy*: polling after
+    every feed never changes the final answer, and each poll equals the
+    offline answer over the samples seen so far."""
+    q = rng.integers(-20, 20, (2, 6)).astype(np.int32)
+    r = rng.integers(-20, 20, 90).astype(np.int32)
+    s = stream(q, chunk=16, return_spans=True)
+    seen = 0
+    for p in (7, 20, 3, 40, 20):
+        s.feed(r[seen:seen + p])
+        seen += p
+        res = s.results()
+        want = sdtw(jnp.asarray(q), jnp.asarray(r[:seen]),
+                    return_spans=True)
+        np.testing.assert_array_equal(np.asarray(res.distances),
+                                      np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(res.starts),
+                                      np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(res.positions),
+                                      np.asarray(want[2]))
+        assert res.samples == seen
+
+
+def test_stream_flush_midstream_keeps_streaming(rng):
+    """A destructive mid-stream flush (carry exits at the true boundary
+    via the clen lane) leaves distances/spans exact afterwards."""
+    q = rng.integers(-20, 20, (3, 7)).astype(np.int32)
+    r = rng.integers(-20, 20, 123).astype(np.int32)
+    want = tuple(np.asarray(x) for x in
+                 sdtw(jnp.asarray(q), jnp.asarray(r), return_spans=True))
+    s = stream(q, chunk=16, return_spans=True)
+    s.feed(r[:37]).flush()          # mid-tile boundary
+    s.feed(r[37:41]).flush()        # tiny follow-up
+    s.feed(r[41:])
+    res = s.results()
+    got = (np.asarray(res.distances), np.asarray(res.starts),
+           np.asarray(res.positions))
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_stream_pallas_path_matches(rng):
+    """The Pallas feed path (kernel carry entry/exit with traced ref_len)
+    equals the rowscan session and the offline engine bitwise."""
+    q = rng.integers(-10, 10, (3, 8)).astype(np.int32)
+    r = rng.integers(-10, 10, 137).astype(np.int32)
+    want = tuple(np.asarray(x) for x in
+                 sdtw(jnp.asarray(q), jnp.asarray(r), return_spans=True))
+    for parts in ([137], [50, 50, 37], [9] * 15 + [2]):
+        s = _feed(stream(q, chunk=32, impl="pallas", return_spans=True,
+                         block_q=2, block_m=64), r, parts)
+        res = s.results()
+        got = (np.asarray(res.distances), np.asarray(res.starts),
+               np.asarray(res.positions))
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b, err_msg=str(parts[:2]))
+    # positions-only session: end lane rides the kernel carry untaxed
+    s = _feed(stream(q, chunk=32, impl="pallas", return_positions=True,
+                     block_q=2, block_m=64), r, [137])
+    res = s.results()
+    np.testing.assert_array_equal(np.asarray(res.distances), want[0])
+    np.testing.assert_array_equal(np.asarray(res.positions), want[2])
+
+
+def test_pruned_stream_equals_exact(rng):
+    """Online LB pruning skips tiles yet the heap equals the exact
+    streamed heap — the admissibility argument, online."""
+    q = rng.integers(-5, 5, (2, 8)).astype(np.int32)
+    r = np.full(512, 1000, np.int32)
+    r[40:60] = rng.integers(-5, 5, 20)
+    r[100:130] = rng.integers(-6, 6, 30)
+    r[400:420] = rng.integers(-5, 5, 20)
+    want = sdtw_chunked(jnp.asarray(q), jnp.asarray(r), chunk=32, top_k=2,
+                        return_spans=True)
+    wd, ws, we = (np.asarray(x) for x in want)
+    s = _feed(stream(q, chunk=32, top_k=2, return_spans=True, prune=True),
+              r, [50] * 10 + [12])
+    res = s.results()
+    assert res.tiles_pruned > 0, "workload built to prune, but nothing was"
+    assert res.tiles_processed < res.tiles_total
+    np.testing.assert_array_equal(np.asarray(res.distances), wd)
+    np.testing.assert_array_equal(np.asarray(res.starts), ws)
+    np.testing.assert_array_equal(np.asarray(res.positions), we)
+
+
+def test_pruned_stream_extends_envelope_cache(rng):
+    """The streamed per-tile envelope lands in the shared cache: an
+    offline ``search_topk`` against the materialized reference afterwards
+    *hits* instead of recomputing, and the entry is bitwise what
+    ``chunk_envelope`` computes."""
+    q = rng.integers(-30, 30, (2, 8)).astype(np.int32)
+    r = rng.integers(-30, 30, 300).astype(np.int32)
+    cache = EnvelopeCache()
+    s = stream(q, chunk=32, top_k=2, prune=True, cache=cache,
+               ref_key="live-ecg")
+    _feed(s, r, [90, 90, 120]).flush()
+    env = cache.peek(("live-ecg", False), 32)
+    assert env is not None
+    mins, maxs = chunk_envelope(jnp.asarray(r), 32)
+    np.testing.assert_array_equal(np.asarray(env[0]), np.asarray(mins))
+    np.testing.assert_array_equal(np.asarray(env[1]), np.asarray(maxs))
+    hits0 = cache.hits
+    sr = search_topk(q, r, k=2, chunk=32, cache=cache, ref_key="live-ecg")
+    assert cache.hits == hits0 + 1
+    res = s.results()
+    np.testing.assert_array_equal(np.asarray(res.distances),
+                                  np.asarray(sr.distances))
+
+
+def test_pruned_restore_into_fresh_cache_keeps_full_envelope(rng):
+    """Restoring a pruned session in a *new process* (fresh cache) must
+    install the whole streamed envelope prefix, not extend from
+    mid-stream — otherwise offline reuse would see a truncated entry."""
+    q = rng.integers(-30, 30, (2, 8)).astype(np.int32)
+    r = rng.integers(-30, 30, 192).astype(np.int32)
+    s1 = stream(q, chunk=32, top_k=2, prune=True, cache=EnvelopeCache(),
+                ref_key="ft")
+    s1.feed(r[:96])
+    fresh = EnvelopeCache()                 # "new process"
+    s2 = StreamSession.restore(s1.snapshot(), cache=fresh)
+    s2.feed(r[96:]).flush()
+    env = fresh.peek(("ft", False), 32)
+    mins, maxs = chunk_envelope(jnp.asarray(r), 32)
+    np.testing.assert_array_equal(np.asarray(env[0]), np.asarray(mins))
+    np.testing.assert_array_equal(np.asarray(env[1]), np.asarray(maxs))
+
+
+def test_envelope_cache_survives_restreams_and_partial_streams(rng):
+    """Cache-corruption regressions: (a) a second monitor on the same
+    ref_key must not double the envelope entry; (b) an entry from a
+    stream that stopped mid-reference must not gate an offline search
+    over the full reference — ``envelope()`` validates the tile count
+    and recomputes instead."""
+    q = rng.integers(-30, 30, (2, 8)).astype(np.int32)
+    r = rng.integers(-30, 30, 192).astype(np.int32)
+    cache = EnvelopeCache()
+    for _ in range(2):                      # re-run the same monitor
+        s = stream(q, chunk=32, top_k=2, prune=True, cache=cache,
+                   ref_key="mon")
+        _feed(s, r, [192]).flush()
+    env = cache.peek(("mon", False), 32)
+    assert len(np.asarray(env[0])) == 6     # not 12
+    ok = search_topk(q, r, k=2, chunk=32, cache=cache, ref_key="mon")
+    want = search_topk(q, r, k=2, chunk=32, prune=False)
+    np.testing.assert_array_equal(np.asarray(ok.distances)[:, 0],
+                                  np.asarray(want.distances)[:, 0])
+    # (b) half-streamed entry: offline search over the full reference
+    cache2 = EnvelopeCache()
+    s = stream(q, chunk=32, top_k=2, prune=True, cache=cache2,
+               ref_key="half")
+    s.feed(r[:96])
+    assert len(np.asarray(cache2.peek(("half", False), 32)[0])) == 3
+    res = search_topk(q, r, k=2, chunk=32, cache=cache2, ref_key="half")
+    np.testing.assert_array_equal(np.asarray(res.distances)[:, 0],
+                                  np.asarray(want.distances)[:, 0])
+    # the stale 3-tile entry was replaced, not served
+    assert len(np.asarray(cache2.peek(("half", False), 32)[0])) == 6
+
+
+def test_pruned_ragged_tile_telemetry_adds_up(rng):
+    """Per-tile counters: pruned + processed == total even when ragged
+    buckets disagree on whether a tile was worth the DP."""
+    qs = [rng.integers(-5, 5, 4).astype(np.int32),
+          rng.integers(-5, 5, 40).astype(np.int32)]
+    r = np.full(1024, 1000, np.int32)
+    r[100:140] = rng.integers(-5, 5, 40)
+    s = stream(qs, chunk=32, top_k=2, prune=True)
+    _feed(s, r, [256] * 4)
+    res = s.results()
+    assert res.tiles_total == 32
+    assert res.tiles_pruned + res.tiles_processed == res.tiles_total
+    # exact sessions report every tile as processed
+    s2 = _feed(stream(qs, chunk=32), r, [1024])
+    r2 = s2.results()
+    assert r2.tiles_processed == r2.tiles_total == 32
+    # spans on a session that doesn't track them raises, not None-array
+    with pytest.raises(ValueError, match="track spans"):
+        r2.spans
+
+
+def test_alert_threshold_fires_on_planted_pattern(rng):
+    """Planting query 0 verbatim in the stream fires a distance-0 alert at
+    the right end column; alerts surface via both the callback and the
+    session's alert log, once per triggering tile."""
+    q = rng.integers(-50, 50, (2, 10)).astype(np.int32)
+    r = rng.integers(200, 400, 200).astype(np.int32)   # far from queries
+    r[150:160] = q[0]
+    events = []
+    s = stream(q, chunk=25, alert_threshold=0, on_alert=events.append)
+    _feed(s, r, [60] * 3 + [20]).flush()
+    assert s.alerts == events
+    assert len(events) == 1
+    ev = events[0]
+    assert isinstance(ev, AlertEvent)
+    assert ev.query == 0 and ev.distance == 0 and ev.end == 159
+    assert ev.tile_start <= ev.end < ev.tile_end
+    # a span-tracking session reports where the match began, too
+    events2 = []
+    s2 = stream(q, chunk=25, alert_threshold=0, on_alert=events2.append,
+                return_spans=True)
+    _feed(s2, r, [200]).flush()
+    assert events2 and events2[0].start == 150 and events2[0].end == 159
+
+
+def test_snapshot_npz_roundtrip(tmp_path, rng):
+    """snapshot() → np.savez → np.load → restore() continues bit-for-bit
+    (the fault-tolerant serving loop)."""
+    q = [rng.integers(-20, 20, L).astype(np.int32) for L in (5, 11, 7)]
+    r = rng.integers(-20, 20, 150).astype(np.int32)
+    s1 = stream(q, chunk=16, top_k=2, return_spans=True)
+    s1.feed(r[:70])
+    path = tmp_path / "session.npz"
+    np.savez(path, **s1.snapshot())
+    s2 = StreamSession.restore(dict(np.load(path, allow_pickle=False)))
+    s1.feed(r[70:])
+    s2.feed(r[70:])
+    r1, r2 = s1.results(), s2.results()
+    np.testing.assert_array_equal(np.asarray(r1.distances),
+                                  np.asarray(r2.distances))
+    np.testing.assert_array_equal(np.asarray(r1.starts),
+                                  np.asarray(r2.starts))
+    np.testing.assert_array_equal(np.asarray(r1.positions),
+                                  np.asarray(r2.positions))
+    # and the restored stream still equals the offline answer
+    want = sdtw(q, jnp.asarray(r), chunk=16, top_k=2, return_spans=True)
+    np.testing.assert_array_equal(np.asarray(r2.distances),
+                                  np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(r2.positions),
+                                  np.asarray(want[2]))
+
+
+def test_sharded_session_single_device_mesh(rng):
+    """The sharded session's full feed/harvest/carry-handback path on the
+    default (1-device, on CPU) mesh: degenerate pipeline, same protocol.
+    The real 8-device bitwise check is §11 of ``_distributed_check.py``."""
+    from repro.stream import ShardedStreamSession
+    q = rng.integers(-10, 10, (3, 6)).astype(np.int32)
+    r = rng.integers(-10, 10, 97).astype(np.int32)
+    s = stream(q, impl="sharded", chunk=8, top_k=2, return_spans=True)
+    for off in range(0, 97, 23):
+        s.feed(r[off:off + 23])
+    res = s.results()
+    want = sdtw(jnp.asarray(q), jnp.asarray(r), chunk=8, top_k=2,
+                return_spans=True)
+    np.testing.assert_array_equal(np.asarray(res.distances),
+                                  np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(res.starts),
+                                  np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(res.positions),
+                                  np.asarray(want[2]))
+    s2 = ShardedStreamSession.restore(s.snapshot())
+    np.testing.assert_array_equal(np.asarray(s2.results().distances),
+                                  np.asarray(res.distances))
+    # plain-distance lane as well
+    sp = stream(q, impl="sharded", chunk=8)
+    sp.feed(r)
+    np.testing.assert_array_equal(
+        np.asarray(sp.results().distances),
+        np.asarray(sdtw(jnp.asarray(q), jnp.asarray(r), chunk=8,
+                        impl="chunked")))
+    # a padded tail flush is terminal on the sharded path
+    s.flush()
+    with pytest.raises(RuntimeError, match="finalized"):
+        s.feed(r[:8])
+    with pytest.raises(ValueError, match="ragged"):
+        stream([q[0], q[1, :4]], impl="sharded")
+    with pytest.raises(ValueError, match="scalar excl_zone"):
+        stream(q, impl="sharded", top_k=2, excl_zone=np.array([1, 2, 3]))
+    with pytest.raises(ValueError, match="prune"):
+        stream(q, impl="sharded", top_k=2, prune=True)
+
+
+def test_stream_argument_validation(rng):
+    q = rng.integers(-5, 5, (2, 6)).astype(np.int32)
+    with pytest.raises(ValueError, match="prune=True"):
+        stream(q, prune=True)
+    with pytest.raises(ValueError, match="alerts"):
+        stream(q, top_k=2, prune=True, alert_threshold=1)
+    with pytest.raises(ValueError, match="pallas"):
+        stream(q, impl="pallas", top_k=2)
+    with pytest.raises(ValueError, match="excl_mode"):
+        stream(q, excl_mode="span")
+    with pytest.raises(ValueError, match="together"):
+        stream(q, excl_lo=3)
+    with pytest.raises(ValueError, match="chunk"):
+        stream(q, chunk=0)
+    s = stream(q, chunk=8)
+    with pytest.raises(ValueError, match="1-D"):
+        s.feed(np.zeros((2, 3), np.int32))
+    s.feed(np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="dtype"):
+        s.feed(np.zeros(4, np.float32))
+    # pruned flush is terminal
+    s2 = stream(q, chunk=8, top_k=1, prune=True)
+    s2.feed(rng.integers(-5, 5, 20).astype(np.int32)).flush()
+    with pytest.raises(RuntimeError, match="finalized"):
+        s2.feed(np.zeros(8, np.int32))
+
+
+def test_stream_hypothesis_partition_invariance(rng):
+    """Hypothesis property: for random references, random partitions,
+    ragged query batches, prune on/off, and a random snapshot/restore
+    point, the streamed answer is invariant — exact sessions equal the
+    offline engine; pruned sessions equal the same pruned session fed in
+    one shot (and their top-1 equals the exact answer)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    M, CHUNK = 40, 8
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        ref=st.lists(st.integers(-12, 12), min_size=M, max_size=M),
+        cuts=st.lists(st.integers(1, M - 1), max_size=6, unique=True),
+        qlens=st.lists(st.integers(1, 8), min_size=1, max_size=3),
+        qvals=st.integers(0, 2 ** 31 - 1),
+        snap_at=st.integers(0, 6),
+        prune=st.booleans(),
+    )
+    def prop(ref, cuts, qlens, qvals, snap_at, prune):
+        r = np.asarray(ref, np.int32)
+        qs = [np.random.default_rng(qvals + i).integers(-12, 12, L)
+              .astype(np.int32) for i, L in enumerate(qlens)]
+        bounds = sorted(set(cuts)) + [M]
+        parts = [b - a for a, b in zip([0] + bounds, bounds) if b > a]
+        kw = dict(chunk=CHUNK, top_k=2, return_spans=True, prune=prune)
+        s = stream(qs, **kw)
+        seen = 0
+        for i, p in enumerate(parts):
+            if i == min(snap_at, len(parts) - 1) and i > 0:
+                s = StreamSession.restore(s.snapshot())
+            s.feed(r[seen:seen + p])
+            seen += p
+        res = s.results()
+        if prune:
+            # deterministic partition invariance + exact top-1
+            whole = stream(qs, **kw).feed(r).results()
+            np.testing.assert_array_equal(np.asarray(res.distances),
+                                          np.asarray(whole.distances))
+            np.testing.assert_array_equal(np.asarray(res.positions),
+                                          np.asarray(whole.positions))
+            exact = sdtw(qs, jnp.asarray(r), top_k=2, return_spans=True)
+            np.testing.assert_array_equal(
+                np.asarray(res.distances)[:, 0],
+                np.asarray(exact[0])[:, 0])
+        else:
+            want = sdtw(qs, jnp.asarray(r), chunk=CHUNK, top_k=2,
+                        return_spans=True)
+            np.testing.assert_array_equal(np.asarray(res.distances),
+                                          np.asarray(want[0]))
+            np.testing.assert_array_equal(np.asarray(res.starts),
+                                          np.asarray(want[1]))
+            np.testing.assert_array_equal(np.asarray(res.positions),
+                                          np.asarray(want[2]))
+
+    prop()
+
+
+def test_golden_stream_bitwise():
+    """Recompute the committed streaming fixture and compare bitwise —
+    numeric drift on the streaming path fails loudly. Regenerate (and
+    justify) via ``python tests/golden/make_golden.py``."""
+    assert GOLDEN.exists(), "golden fixture missing — run " \
+        "tests/golden/make_golden.py"
+    from golden.make_golden import compute_stream  # noqa: E402
+    want = compute_stream()
+    with np.load(GOLDEN) as got:
+        assert set(got.files) == set(want)
+        for key in sorted(want):
+            np.testing.assert_array_equal(
+                got[key], want[key],
+                err_msg=f"golden drift in {key!r} — if intentional, "
+                        "regenerate via tests/golden/make_golden.py")
