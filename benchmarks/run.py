@@ -6,9 +6,52 @@ same rows as JSON (``--json out.json``) so bench trajectories
 (``BENCH_*.json``) can be recorded per commit. ``--smoke`` shrinks the
 compute-heavy benches to tiny shapes for the CI bench-smoke job;
 ``--only`` selects a comma-separated subset by module name.
+
+Regression gate: ``--compare BASELINE.json`` checks every fresh row
+against the committed baseline by name and exits non-zero when a row got
+more than ``--tolerance`` slower (ratio-tolerant: CI runners and dev
+hosts differ in absolute speed, so the gate is meant to catch
+order-of-magnitude path regressions, not µs jitter — rows faster than
+``--min-us`` in the baseline are skipped as noise, and baseline rows
+whose benchmark module did not run this invocation are ignored so
+``--only``/``--smoke`` subsets stay comparable).
 """
 import argparse
 import json
+
+
+def compare_rows(rows, baseline_rows, tolerance: float, min_us: float):
+    """Compare fresh rows against a recorded baseline.
+
+    Returns ``(report_lines, regressions, missing)`` where regressions are
+    rows slower than ``baseline * (1 + tolerance)`` and missing are
+    baseline rows whose module ran but which the fresh run no longer
+    produces (a silently dropped benchmark is a coverage regression).
+    """
+    fresh = {r["name"]: r for r in rows}
+    prefixes_run = {name.split("/")[0] for name in fresh}
+    report, regressions, missing = [], [], []
+    for brow in baseline_rows:
+        name = brow["name"]
+        if name.split("/")[0] not in prefixes_run:
+            continue                      # that module did not run
+        crow = fresh.get(name)
+        if crow is None:
+            missing.append(name)
+            report.append(f"MISSING  {name}")
+            continue
+        if brow["us_per_call"] < min_us:
+            report.append(f"skip     {name} (baseline {brow['us_per_call']:.0f}us "
+                          f"< {min_us:.0f}us noise floor)")
+            continue
+        ratio = crow["us_per_call"] / brow["us_per_call"]
+        ok = ratio <= 1.0 + tolerance
+        tag = "ok      " if ok else "REGRESSED"
+        report.append(f"{tag} {name} {brow['us_per_call']:.0f}us -> "
+                      f"{crow['us_per_call']:.0f}us ({ratio:.2f}x)")
+        if not ok:
+            regressions.append(name)
+    return report, regressions, missing
 
 
 def main(argv=None):
@@ -20,6 +63,15 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (e.g. "
                          "'search_bench,sdtw_kernel_bench')")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="fail if any row regressed vs this recorded "
+                         "baseline (see module docstring)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed slowdown ratio above 1.0 for --compare "
+                         "(0.5 = fail beyond 1.5x the baseline)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="baseline rows faster than this are skipped by "
+                         "--compare (timer noise)")
     args = ap.parse_args(argv)
 
     from . import (common, endurance, fig09_latency_sweep, fig10_energy_sweep,
@@ -54,6 +106,21 @@ def main(argv=None):
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump(common.rows_to_json(rows), f, indent=1)
+
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        report, regressions, missing = compare_rows(
+            common.rows_to_json(rows), baseline, args.tolerance, args.min_us)
+        print(f"\n--compare {args.compare} (tolerance {args.tolerance:.2f}, "
+              f"noise floor {args.min_us:.0f}us)")
+        for line in report:
+            print("  " + line)
+        if regressions or missing:
+            raise SystemExit(
+                f"bench regression gate failed: {len(regressions)} regressed "
+                f"{regressions}, {len(missing)} missing {missing}")
+        print("bench regression gate passed")
     return rows
 
 

@@ -114,6 +114,30 @@ def main(smoke: bool = False):
     ql = jnp.asarray(rng.integers(-100, 100, (bl, nl)).astype(np.int32))
     rl = jnp.asarray(rng.integers(-100, 100, ml).astype(np.int32))
     chunks = (512, 1024) if smoke else (8192, 32768)
+    cells_l = bl * nl * ml
+
+    # Long-reference Pallas rows: the kernel path end to end, single launch
+    # (impl='pallas') and chunk-streamed (impl='pallas' + chunk=). Off-TPU
+    # these run in interpret mode — the absolute numbers are a *relative*
+    # measurement (the regression gate and the README table compare them
+    # against BENCH_baseline.json recorded on the same class of host).
+    want_l = np.asarray(sdtw(ql, rl, impl="chunked", chunk=chunks[-1]))
+    fnp = functools.partial(sdtw, ql, rl, impl="pallas")
+    us = time_call(fnp, repeats=3, warmup=1)
+    eq = np.array_equal(np.asarray(fnp()), want_l)
+    rows.append(emit(
+        f"sdtw_kernel/pallas_long_b{bl}_n{nl}_m{ml}", us,
+        f"Mcells_per_s={cells_l / (us * 1e-6) / 1e6:.1f};"
+        f"vs_chunked={'equal' if eq else 'DIFFERS'}"))
+    pc = chunks[-1]
+    fnpc = functools.partial(sdtw, ql, rl, impl="pallas", chunk=pc)
+    us = time_call(fnpc, repeats=3, warmup=1)
+    eq = np.array_equal(np.asarray(fnpc()), want_l)
+    rows.append(emit(
+        f"sdtw_kernel/pallas_chunk_b{bl}_n{nl}_m{ml}_c{pc}", us,
+        f"Mcells_per_s={cells_l / (us * 1e-6) / 1e6:.1f};"
+        f"vs_chunked={'equal' if eq else 'DIFFERS'}"))
+
     us_plain = None
     for chunk in chunks:
         fn = functools.partial(sdtw, ql, rl, impl="chunked", chunk=chunk)

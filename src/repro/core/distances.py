@@ -42,6 +42,26 @@ def lex_min(v1, s1, v2, s2):
     return jnp.where(take2, v2, v1), jnp.where(take2, s2, s1)
 
 
+def tropical_combine(left, right):
+    """Compose f_r ∘ f_l where f(x) = min(u, a + x) over the (min,+)
+    semiring — the associative operator behind every sDTW row scan
+    (``lax.associative_scan`` in the rowscan schedule, the Hillis-Steele
+    doubling and the work-efficient scheme in the Pallas kernel). Defined
+    once here so no execution regime can drift."""
+    a_l, u_l = left
+    a_r, u_r = right
+    return sat_add(a_l, a_r), jnp.minimum(u_r, sat_add(a_r, u_l))
+
+
+def tropical_combine_span(left, right):
+    """``tropical_combine`` with the start lane riding the u-component:
+    f(x, sx) = lexmin((u, su), (a + x, sx))."""
+    a_l, u_l, s_l = left
+    a_r, u_r, s_r = right
+    u, s = lex_min(u_r, s_r, sat_add(a_r, u_l), s_l)
+    return sat_add(a_l, a_r), u, s
+
+
 def accum_dtype(dtype) -> jnp.dtype:
     """Accumulator dtype for a given input dtype."""
     if jnp.issubdtype(dtype, jnp.floating):

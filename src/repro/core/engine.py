@@ -32,9 +32,21 @@ different path are rejected instead of silently ignored —
 ``impl='rowscan'`` (or ``'wavefront'``) with ``mesh=`` or ``chunk=`` is a
 ``ValueError``, as is ``mesh=`` with any non-sharded forced impl. The one
 deliberate combination is ``impl='pallas'`` with ``chunk=``: the reference
-is streamed through the kernel in ``chunk``-sized slices via the kernel's
-chunk-carry protocol (one kernel launch per slice), which is how a
-TPU-resident caller bounds the per-launch reference footprint.
+is streamed through the kernel's chunk-carry protocol *on the device*.
+For references up to ``PALLAS_FUSED_MAX`` samples this is the single-
+launch grid path (the kernel's own sequential tile dimension already
+streams HBM→VMEM tile by tile, so one ``pallas_call`` covers any
+device-resident reference and ``chunk`` is advisory); beyond it, the
+reference is scanned in ``chunk``-sized statically-shaped slices inside
+one jitted ``lax.scan`` (``_pallas_scan_streamed``) — the carry never
+leaves the device and there is exactly one compiled executable regardless
+of reference length or tail size (the tail slice is right-padded and
+masked via the kernel's traced ``ref_len``). ``_pallas_host_loop`` keeps
+the legacy one-launch-per-slice loop — not dispatched automatically, but
+kept callable as the semantic reference the device-side paths are
+differential-tested against, and for callers that must slice a
+host-resident reference themselves; it pads the ragged tail to the
+static ``chunk`` shape, so it too emits exactly one compiled executable.
 
 Match spans: ``return_spans=True`` returns ``(dists, starts, ends)`` on
 every path — the DP carries a start-pointer lane (each cell remembers the
@@ -64,13 +76,14 @@ lifetime instead of one shape per distinct query length.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distances import big
+from .distances import accum_dtype, big
 from .sdtw import sdtw_batch, sdtw_chunked
 from .traceback import AlignResult, DEFAULT_TRACE_CHUNK, traceback_path
 
@@ -80,6 +93,13 @@ EXCL_MODES = ("end", "span")
 CHUNK_THRESHOLD = 1 << 17   # auto-switch to streaming above this M
 DEFAULT_CHUNK = 8192        # tile size for chunked/sharded streaming
 MIN_BUCKET = 16             # smallest ragged-batch padded length
+
+#: Largest reference (samples) the pallas+chunk path runs as one
+#: single-launch kernel grid; longer references stream through the
+#: device-side ``lax.scan`` of chunk-sized slices. 4M samples = 16 MB of
+#: int32 — far below HBM, but the single-launch grid is unrolled per tile
+#: at trace time, so the cap also bounds compile time.
+PALLAS_FUSED_MAX = 1 << 22
 
 
 def choose_impl(nq: int, n: int, m: int, *, backend: Optional[str] = None,
@@ -149,9 +169,11 @@ def _check_forced_impl(impl: str, *, mesh, chunk, top_k):
                 "impl='sharded'/'auto'")
         if top_k is not None:
             raise ValueError(
-                "the pallas kernel tracks only the best end position "
-                "(return_positions=True); top_k= runs on the chunked/"
-                "sharded streaming paths")
+                "impl='pallas' reports the single best match "
+                "(return_positions/return_spans); offline top_k= runs on "
+                "the chunked/sharded streaming paths — the kernel's "
+                "last-row capture serves top-K via repro.search "
+                "(engine_impl='pallas') and streaming sessions")
     elif impl == "chunked" and mesh is not None:
         raise ValueError(
             "impl='chunked' is single-device; drop mesh= or use "
@@ -163,7 +185,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
          excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
          top_k: Optional[int] = None, return_positions: bool = False,
          return_spans: bool = False, excl_zone: Optional[int] = None,
-         excl_mode: str = "end", block_q: int = 8, block_m: int = 512):
+         excl_mode: str = "end", block_q: Optional[int] = None,
+         block_m: Optional[int] = None):
     """Subsequence-DTW distances of ``queries`` against ``reference``.
 
     Args:
@@ -195,7 +218,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  ``excl_zone``; 'span' suppresses matches whose spans
                  overlap (widened by ``excl_zone``). Only meaningful with
                  ``top_k``.
-      block_q/block_m: Pallas kernel block shape.
+      block_q/block_m: Pallas kernel block shape (``None`` = auto-tuned
+                 per backend; see ``repro.kernels.sdtw.resolve_blocks``).
 
     Returns: (nq,) distances in the accumulator dtype — scalar for a single
     1-D query; a (dists, positions) pair or (dists, starts, ends) triple
@@ -294,7 +318,7 @@ def stream(queries, *, qlens=None, metric: str = "abs_diff",
            return_positions: bool = False, excl_lo=None, excl_hi=None,
            prune: bool = False, span_cap: Optional[int] = None,
            alert_threshold=None, on_alert=None, cache=None, ref_key=None,
-           block_q: int = 8, block_m: int = 512):
+           block_q: Optional[int] = None, block_m: Optional[int] = None):
     """Open an online monitoring session: the streaming front door.
 
     Where ``sdtw()`` answers one offline query batch against a
@@ -310,10 +334,13 @@ def stream(queries, *, qlens=None, metric: str = "abs_diff",
     Dispatch: ``mesh=`` (or ``impl='sharded'``) returns the
     ``ShardedStreamSession`` (per-device chunk streams through the
     ppermute carry); ``impl='pallas'`` streams fed chunks through the
-    kernel's carry entry/exit; ``'auto'`` picks the Pallas path on a TPU
-    backend for plain distance/span monitoring and the rowscan tile loop
-    everywhere else. ``chunk`` is the internal DP tile size (compile
-    granularity) — feed granularity is independent of it.
+    kernel's carry entry/exit — including top-K heaps, threshold alerts
+    and online pruning, which score on the kernel's in-kernel last-row
+    capture; ``'auto'`` picks the Pallas path on a TPU backend (rowscan
+    only for per-query exclusion zones, which the kernel does not
+    support) and the rowscan tile loop everywhere else. ``chunk`` is the
+    internal DP tile size (compile granularity) — feed granularity is
+    independent of it.
     """
     from repro.stream import ShardedStreamSession, StreamSession
     if impl not in ("auto", "rowscan", "pallas", "sharded"):
@@ -341,11 +368,11 @@ def stream(queries, *, qlens=None, metric: str = "abs_diff",
             return_positions=return_positions, excl_lo=excl_lo,
             excl_hi=excl_hi)
     if impl == "auto":
-        wants_rowscan = (top_k is not None or prune
-                         or alert_threshold is not None
-                         or excl_lo is not None)
+        # Only per-query exclusion zones force the rowscan tile loop —
+        # top-K heaps, threshold alerts and online pruning all score on
+        # the kernel's in-kernel last-row capture now.
         impl = ("pallas" if jax.default_backend() == "tpu"
-                and not wants_rowscan else "rowscan")
+                and excl_lo is None else "rowscan")
     return StreamSession(
         queries, qlens=qlens, metric=metric, chunk=chunk, impl=impl,
         top_k=top_k, excl_zone=excl_zone, excl_mode=excl_mode,
@@ -410,27 +437,107 @@ def align(queries, reference, qlens=None, *, metric: str = "abs_diff",
 
 def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
                      block_m, return_positions, return_spans=False):
-    """Stream the reference through the Pallas kernel in chunk-sized slices,
-    chaining the kernel carry between launches — the explicit meaning of
-    ``impl='pallas'`` + ``chunk=``. The start-pointer lane joins the carry
-    only when spans are requested (the plain stream keeps the untaxed
-    (bcol, best, pos) triple)."""
-    from repro.kernels.sdtw import sdtw_pallas
+    """The ``impl='pallas'`` + ``chunk=`` dispatcher.
+
+    Device-resident references (M ≤ ``PALLAS_FUSED_MAX``) take the
+    single-launch grid path — the kernel's own sequential tile dimension
+    already streams the reference HBM→VMEM with the boundary column in
+    VMEM scratch, so one compiled program covers the whole reference and
+    ``chunk`` is advisory. Longer references run the device-side
+    ``lax.scan`` over chunk-sized slices. Either way the carry never
+    leaves the device and exactly one executable is compiled."""
     m = reference.shape[0]
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
-    carry = None
-    for off in range(0, m, chunk):
-        _, carry = sdtw_pallas(queries, reference[off:off + chunk], qlens,
-                               metric, block_q=block_q, block_m=block_m,
-                               carry=carry, ref_offset=off,
-                               return_carry=True,
-                               track_start=return_spans)
+    if m <= PALLAS_FUSED_MAX:
+        from repro.kernels.sdtw import sdtw_pallas
+        return sdtw_pallas(queries, reference, qlens, metric,
+                           block_q=block_q, block_m=block_m,
+                           return_positions=return_positions,
+                           return_spans=return_spans)
+    return _pallas_scan_streamed(queries, reference, qlens, metric,
+                                 chunk=chunk, block_q=block_q,
+                                 block_m=block_m,
+                                 return_positions=return_positions,
+                                 return_spans=return_spans)
+
+
+def _unpack_pallas_carry(carry, return_positions, return_spans):
     if return_spans:
         _, _, best, pos, start = carry
         return best, start, pos
     _, best, pos = carry
     return (best, pos) if return_positions else best
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "chunk", "block_q", "block_m", "return_positions",
+    "return_spans"))
+def _pallas_scan_streamed(queries, reference, qlens, metric, *, chunk,
+                          block_q, block_m, return_positions,
+                          return_spans):
+    """Device-side chunk pipeline: one jitted ``lax.scan`` over statically-
+    shaped reference slices, chaining the kernel carry in device memory —
+    no host hop between slices, one compile for any reference length (the
+    ragged tail is right-padded to ``chunk`` and masked via the kernel's
+    traced ``ref_len``). The start-pointer lane joins the carry only when
+    spans are requested (the plain stream keeps the untaxed
+    (bcol, best, pos) triple)."""
+    from repro.kernels.sdtw import pallas_carry_init, sdtw_pallas
+    b, n = queries.shape
+    m = reference.shape[0]
+    n_slices = -(-m // chunk)
+    r_pad = jnp.pad(reference, (0, n_slices * chunk - m))
+    slices = r_pad.reshape(n_slices, chunk)
+    offs = jnp.arange(n_slices, dtype=jnp.int32) * chunk
+    clens = jnp.minimum(chunk, m - offs)
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    carry = pallas_carry_init(b, n, acc, track_start=return_spans)
+
+    def step(c, xs):
+        sl, off, cl = xs
+        _, c2 = sdtw_pallas(queries, sl, qlens, metric, block_q=block_q,
+                            block_m=block_m, carry=c, ref_offset=off,
+                            ref_len=cl, return_carry=True,
+                            track_start=return_spans)
+        return c2, None
+
+    carry, _ = jax.lax.scan(step, carry, (slices, offs, clens))
+    return _unpack_pallas_carry(carry, return_positions, return_spans)
+
+
+def _pallas_host_loop(queries, reference, qlens, metric, chunk, block_q=None,
+                      block_m=None, return_positions=False,
+                      return_spans=False):
+    """Legacy host-side chunk loop: one kernel launch per slice, the carry
+    round-tripping through dispatch. Not dispatched automatically (both
+    device-side paths subsume it); kept as the semantic reference the
+    device-side paths are differential-tested against, and for callers
+    that need to slice a host-resident reference themselves.
+
+    The ragged tail slice is right-padded to the static ``chunk`` shape
+    and masked via the kernel's traced ``ref_len``, and the first slice
+    starts from an explicit ``pallas_carry_init`` pytree, so the loop
+    emits exactly one compiled executable for any reference length (the
+    old version sliced ``reference[off:off + chunk]`` raw, recompiling for
+    every distinct tail length)."""
+    from repro.kernels.sdtw import pallas_carry_init, sdtw_pallas
+    b, n = queries.shape
+    m = reference.shape[0]
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    acc = accum_dtype(jnp.result_type(queries, reference))
+    carry = pallas_carry_init(b, n, acc, track_start=return_spans)
+    for off in range(0, m, chunk):
+        sl = reference[off:off + chunk]
+        cl = sl.shape[0]
+        if cl < chunk:
+            sl = jnp.pad(sl, (0, chunk - cl))
+        _, carry = sdtw_pallas(queries, sl, qlens, metric, block_q=block_q,
+                               block_m=block_m, carry=carry, ref_offset=off,
+                               ref_len=cl, return_carry=True,
+                               track_start=return_spans)
+    return _unpack_pallas_carry(carry, return_positions, return_spans)
 
 
 def bucketize(lengths: Sequence[int]):

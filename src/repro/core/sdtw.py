@@ -54,7 +54,8 @@ import numpy as np
 from jax import lax
 
 from .distances import (INT_FAR as _INT_FAR_INT, accum_dtype, big, lex_min,
-                        pointwise_distance, sat_add)
+                        pointwise_distance, sat_add, tropical_combine,
+                        tropical_combine_span)
 from .topk import topk_init, topk_merge
 
 #: See ``repro.core.distances.INT_FAR`` — re-bound as an int32 scalar for
@@ -63,21 +64,11 @@ INT_FAR = np.int32(_INT_FAR_INT)
 
 _lex_min = lex_min
 
-
-def _tropical_combine(left, right):
-    """Compose f_r ∘ f_l where f(x) = min(u, a + x) over the (min,+) semiring."""
-    a_l, u_l = left
-    a_r, u_r = right
-    return sat_add(a_l, a_r), jnp.minimum(u_r, sat_add(a_r, u_l))
-
-
-def _tropical_combine_span(left, right):
-    """``_tropical_combine`` with the start lane riding the u-component:
-    f(x, sx) = lexmin((u, su), (a + x, sx))."""
-    a_l, u_l, s_l = left
-    a_r, u_r, s_r = right
-    u, s = _lex_min(u_r, s_r, sat_add(a_r, u_l), s_l)
-    return sat_add(a_l, a_r), u, s
+# The (min,+) semiring combines live in ``repro.core.distances`` (shared
+# with the Pallas kernel's work-efficient scan scheme); the old private
+# names stay bound for existing importers.
+_tropical_combine = tropical_combine
+_tropical_combine_span = tropical_combine_span
 
 
 def _masked_distance(qi, ref, metric, excl_lo, excl_hi, BIG):
@@ -542,6 +533,34 @@ def sdtw_chunk_batch_topk(queries, ref_chunk, qlens, carry, j0, m_total,
 
     return jax.vmap(one)(queries, qlens, bcol, best, excl_lo, excl_hi,
                          top_d, top_p, top_s, excl_zone)
+
+
+def topk_fold_lastrow(heap, lastrow, lstarts, j0, k: int, excl_zone,
+                      excl_span: bool = False):
+    """Fold a batched (nq, C) candidate row into the top-K heap.
+
+    ``lastrow`` is the DP's row ``qlen - 1`` over C reference columns
+    (global columns ``[j0, j0 + C)``) — exactly what the rowscan chunk
+    path harvests with ``return_lastrow=True`` and what the Pallas
+    kernel's in-kernel last-row capture emits — and the merge performed
+    here is the *same* ``topk_merge`` call the rowscan streaming path runs
+    per chunk, so a Pallas-scored tile updates the heap bitwise-
+    identically to the rowscan-scored one. ``lstarts`` is the candidate
+    row's start-pointer lane (``None`` when the caller does not track
+    spans — the heap's start lane then stays -1); ``excl_zone`` is the
+    per-query (nq,) suppression radius.
+    """
+    hd, hp, hs = heap
+    c = lastrow.shape[1]
+    pos = j0 + jnp.arange(c, dtype=jnp.int32)
+    if lstarts is None:
+        lstarts = jnp.full_like(lastrow, -1, dtype=jnp.int32)
+
+    def one(hd_, hp_, hs_, lr, ls, ez):
+        return topk_merge(hd_, hp_, hs_, lr, pos, ls, k, ez, excl_span)
+
+    return jax.vmap(one)(hd.astype(lastrow.dtype), hp, hs, lastrow, lstarts,
+                         jnp.asarray(excl_zone, jnp.int32))
 
 
 def default_excl_zone(qlens):

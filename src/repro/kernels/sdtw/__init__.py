@@ -1,3 +1,3 @@
-from .ops import sdtw_pallas
+from .ops import pallas_carry_init, resolve_blocks, sdtw_pallas
 
-__all__ = ["sdtw_pallas"]
+__all__ = ["pallas_carry_init", "resolve_blocks", "sdtw_pallas"]

@@ -10,7 +10,18 @@ long reference can be streamed through fixed-shape kernel launches — the
 same O(N) boundary-column hand-off MATSA performs between subarrays
 (§III-B), lifted to the call boundary. In span mode the carry includes the
 DP start-pointer lane, so streamed slices report exact global match
-spans; the plain variant keeps the untaxed value+position lanes."""
+spans; the plain variant keeps the untaxed value+position lanes.
+
+Auto-tuning (``block_q``/``block_m``/``scan_scheme``/``row_tile`` default
+to ``None``): on TPU the defaults are the sublane-aligned (8, 512) block
+with the Hillis-Steele ``"shift"`` scan and ``row_tile=8``; in interpret
+mode (off-TPU) the block is fitted to the actual batch (no sublane
+constraint to respect) with a tile large enough to cover the reference up
+to a working-set budget, the work-efficient ``"assoc"`` scan, and no row
+unrolling (XLA-CPU gains nothing from it). Both configurations produce
+bitwise-identical int32 results — the schemes differ only in float32
+summation order.
+"""
 from __future__ import annotations
 
 import functools
@@ -18,26 +29,90 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.distances import INT_FAR, accum_dtype, big
 from .sdtw import _sdtw_kernel
 
-DEFAULT_BLOCK_Q = 8     # sublane-aligned query block
-DEFAULT_BLOCK_M = 512   # lane-aligned reference tile (multiple of 128)
+DEFAULT_BLOCK_Q = 8     # sublane-aligned query block (TPU)
+DEFAULT_BLOCK_M = 512   # lane-aligned reference tile (multiple of 128, TPU)
+DEFAULT_ROW_TILE = 8    # rows per boundary-column slice access (TPU)
+
+#: Interpret-mode working-set budget: block_q * block_m is kept at or
+#: under this many accumulator elements (~8 MB int32 per live row array).
+INTERPRET_ELEM_BUDGET = 1 << 21
+INTERPRET_MAX_BLOCK_Q = 32
 
 
 def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _pow2_at_least(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def resolve_blocks(b: int, m: int, block_q, block_m, scan_scheme, row_tile,
+                   interpret: bool):
+    """Fill in the auto (None) kernel tuning knobs for this call shape.
+
+    Returns ``(block_q, block_m, scan_scheme, row_tile)``. Interpret mode
+    has no sublane/lane alignment to respect, so the query block fits the
+    batch exactly (padding queries to a multiple of 8 would be pure wasted
+    compute) and the reference tile grows to cover the reference up to
+    ``INTERPRET_ELEM_BUDGET`` (fewer boundary-column crossings, wider
+    work-efficient scans).
+    """
+    if block_q is None:
+        block_q = (DEFAULT_BLOCK_Q if not interpret
+                   else max(1, min(INTERPRET_MAX_BLOCK_Q, b)))
+    if block_m is None:
+        if not interpret:
+            block_m = DEFAULT_BLOCK_M
+        else:
+            # Largest power of two keeping block_q * block_m at or under
+            # the budget (rounding the quotient *up* would overshoot by
+            # up to 1.5x for non-power-of-two batches).
+            budget = max(512, INTERPRET_ELEM_BUDGET // block_q)
+            budget_pow2 = 1 << (budget.bit_length() - 1)
+            block_m = min(max(16, _pow2_at_least(m)), budget_pow2)
+    if scan_scheme is None:
+        scan_scheme = "shift" if not interpret else "assoc"
+    if row_tile is None:
+        row_tile = DEFAULT_ROW_TILE if not interpret else 1
+    return block_q, block_m, scan_scheme, row_tile
+
+
+def pallas_carry_init(b: int, n: int, dtype, track_start: bool = False):
+    """Fresh kernel chunk carry for a (b, N) query batch.
+
+    ``(bcol (b, N), best (b,), pos (b,))`` — or the 5-tuple
+    ``(bcol, bstart, best, pos, start)`` with ``track_start`` — exactly
+    the structure ``sdtw_pallas(return_carry=True)`` emits, so a host loop
+    can seed its first call with a real pytree (one compiled executable
+    for every slice, first included) instead of ``carry=None``.
+    """
+    acc = accum_dtype(dtype)
+    BIG = big(acc)
+    bcol = jnp.full((b, n), BIG, acc)
+    best = jnp.full((b,), BIG, acc)
+    pos = jnp.full((b,), -1, jnp.int32)
+    if not track_start:
+        return bcol, best, pos
+    bstart = jnp.full((b, n), INT_FAR, jnp.int32)
+    start = jnp.full((b,), -1, jnp.int32)
+    return bcol, bstart, best, pos, start
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("metric", "block_q", "block_m", "interpret",
                      "return_carry", "return_positions", "return_spans",
-                     "track_start"))
+                     "track_start", "scan_scheme", "row_tile",
+                     "return_lastrow"))
 def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
-                block_q: int = DEFAULT_BLOCK_Q,
-                block_m: int = DEFAULT_BLOCK_M,
+                block_q: int | None = None,
+                block_m: int | None = None,
                 interpret: bool | None = None,
                 carry=None,
                 return_carry: bool = False,
@@ -45,21 +120,32 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 return_positions: bool = False,
                 return_spans: bool = False,
                 track_start: bool = False,
-                ref_len=None):
+                ref_len=None,
+                ref_lead=0,
+                scan_scheme: str | None = None,
+                row_tile: int | None = None,
+                return_lastrow: bool = False):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
-    VMEM working set per grid cell ≈ block_q·(2·block_m + 3·N) accumulator
-    words plain, ≈ block_q·(3·block_m + 5·N) in span mode (the start lanes
-    are int32) — block shapes must be chosen so this fits (~16 MB VMEM on
-    v5e); the defaults handle N ≤ 48K (plain) / N ≤ 24K (spans)
-    comfortably.
+    VMEM working set per grid cell ≈
+    ``block_q · (3·block_m + 3·N)`` accumulator words plain,
+    ``block_q · (6·block_m + 5·N)`` in span mode (the start lanes are
+    int32): the boundary column and (span mode) its start lane live in
+    persistent VMEM *scratch* accessed one ``row_tile``-wide slice per
+    loop iteration, and the row loop keeps ~3 (plain) / ~6 (span)
+    block-wide row vectors live (prev / captured-last-row / scan
+    temporaries, plus the start lanes). ``return_lastrow`` adds one
+    ``block_q · block_m`` output block (+ its int32 start lane in span
+    mode). Block shapes must be chosen so this fits (~16 MB VMEM on v5e);
+    the TPU defaults handle N ≤ 48K (plain) / N ≤ 24K (spans) comfortably.
 
     Chunk-carry protocol: ``carry`` is an optional
     ``(bcol (B, N), best (B,), pos (B,))`` triple — the DP boundary column
     S[:, -1] of the reference slice processed so far, the running
     per-query best, and the global end position of that best (a legacy
-    ``(bcol, best)`` pair is accepted and seeds positions at -1). In span
-    mode (``return_spans=True``, or ``track_start=True`` to track without
+    ``(bcol, best)`` pair is accepted and seeds positions at -1;
+    ``pallas_carry_init`` builds a fresh one explicitly). In span mode
+    (``return_spans=True``, or ``track_start=True`` to track without
     changing the primary result, e.g. mid-stream) the carry is the
     5-tuple ``(bcol, bstart, best, pos, start)`` with the boundary
     column's start-pointer lane and the global start of the running best;
@@ -69,14 +155,26 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     ``ref_offset`` is the global column index of ``reference[0]`` (traced;
     no recompile per slice) so reported positions are global. ``ref_len``
     (traced, default the full array) marks only the first ``ref_len``
-    columns of ``reference`` as real: the kernel already masks columns
-    ≥ rlen and exits its carry at column ``rlen - 1``, so a streaming
-    caller can right-pad variable-size slices to one static shape and
-    still chain the carry exactly — no recompile per fed chunk length.
+    columns of ``reference`` as real: the kernel masks columns ≥ rlen and
+    exits its carry at column ``rlen - 1``, so a streaming caller can
+    right-pad variable-size slices to one static shape and still chain the
+    carry exactly — no recompile per fed chunk length. ``ref_lead``
+    (traced, default 0) additionally masks the first ``ref_lead`` columns
+    — the left padding of a pruned-search halo group; it assumes a fresh
+    carry (the pad columns behave like the implicit BIG columns before the
+    reference starts).
 
     With ``return_positions=True`` the primary result is a
     ``(dists (B,), end_positions (B,))`` pair; with ``return_spans=True``
     it is a ``(dists, starts, ends)`` triple.
+
+    ``return_lastrow=True`` appends the in-kernel last-row capture to the
+    return: the (B, M) candidate row — the DP's row ``qlen - 1``, i.e. the
+    cost of a match *ending* at each reference column (BIG at masked
+    columns), plus its (B, M) start lane in span mode. This is the same
+    row ``repro.core.sdtw.sdtw_chunk_batch_topk`` harvests, so top-K
+    consumers fold it with the identical ``topk_fold_lastrow`` merge.
+    Return order: ``res[, new_carry][, lastrow[, lastrow_starts]]``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -84,6 +182,8 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     m = reference.shape[0]
     acc = accum_dtype(jnp.result_type(queries, reference))
     BIG = big(acc)
+    block_q, block_m, scan_scheme, row_tile = resolve_blocks(
+        b, m, block_q, block_m, scan_scheme, row_tile, interpret)
 
     carry = tuple(carry) if carry is not None else ()
     track = return_spans or track_start or len(carry) == 5
@@ -121,22 +221,25 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     r_pad = jnp.zeros((1, mp), reference.dtype).at[0, :m].set(reference)
     qlen_pad = jnp.ones((bp, 1), jnp.int32).at[:b, 0].set(qlens)
     rlen = jnp.full((1, 1), m if ref_len is None else ref_len, jnp.int32)
+    lead = jnp.full((1, 1), ref_lead, jnp.int32)
     off = jnp.full((1, 1), ref_offset, jnp.int32)
     bcol_pad = jnp.full((bp, n), BIG, acc).at[:b].set(bcol)
     best_pad = jnp.full((bp, 1), BIG, acc).at[:b, 0].set(best)
     pos_pad = jnp.full((bp, 1), -1, jnp.int32).at[:b, 0].set(pos)
 
     grid = (bp // block_q, mp // block_m)
-    kernel = functools.partial(_sdtw_kernel, metric, n, block_m, track)
+    kernel = functools.partial(_sdtw_kernel, metric, n, block_m, track,
+                               return_lastrow, scan_scheme, row_tile)
 
     col_spec = pl.BlockSpec((block_q, n), lambda qb, t: (qb, 0))
     scalar_spec = pl.BlockSpec((block_q, 1), lambda qb, t: (qb, 0))
     tile_spec = pl.BlockSpec((1, block_m), lambda qb, t: (0, t))
     one_spec = pl.BlockSpec((1, 1), lambda qb, t: (0, 0))
+    row_spec = pl.BlockSpec((block_q, block_m), lambda qb, t: (qb, t))
 
-    inputs = [q_pad, r_pad, qlen_pad, rlen, off, bcol_pad]
+    inputs = [q_pad, r_pad, qlen_pad, rlen, lead, off, bcol_pad]
     in_specs = [col_spec, tile_spec, scalar_spec, one_spec, one_spec,
-                col_spec]
+                one_spec, col_spec]
     if track:
         bstart_pad = jnp.full((bp, n), INT_FAR,
                               jnp.int32).at[:b].set(bstart)
@@ -160,15 +263,31 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     if track:
         out_specs += [scalar_spec]
         out_shape += [jax.ShapeDtypeStruct((bp, 1), jnp.int32)]
+    if return_lastrow:
+        out_specs += [row_spec]
+        out_shape += [jax.ShapeDtypeStruct((bp, mp), acc)]
+        if track:
+            out_specs += [row_spec]
+            out_shape += [jax.ShapeDtypeStruct((bp, mp), jnp.int32)]
+
+    scratch_shapes = [pltpu.VMEM((block_q, n), acc)]
+    if track:
+        scratch_shapes += [pltpu.VMEM((block_q, n), jnp.int32)]
 
     outs = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
-        out_shape=out_shape, interpret=interpret,
+        out_shape=out_shape, scratch_shapes=scratch_shapes,
+        interpret=interpret,
     )(*inputs)
-    if track:
-        out, bound, bound_start, pos_out, start_out = outs
-    else:
-        out, bound, pos_out = outs
+    outs = list(outs)
+    out = outs.pop(0)
+    bound = outs.pop(0)
+    bound_start = outs.pop(0) if track else None
+    pos_out = outs.pop(0)
+    start_out = outs.pop(0) if track else None
+    lastrow = outs.pop(0) if return_lastrow else None
+    lastrow_start = outs.pop(0) if (return_lastrow and track) else None
+
     dist = out[:b, 0]
     end_pos = pos_out[:b, 0]
     if return_spans:
@@ -177,11 +296,17 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
         res = (dist, end_pos)
     else:
         res = dist
+    extras = []
     if return_carry:
         if track:
-            new_carry = (bound[:b], bound_start[:b], dist, end_pos,
-                         start_out[:b, 0])
+            extras.append((bound[:b], bound_start[:b], dist, end_pos,
+                           start_out[:b, 0]))
         else:
-            new_carry = (bound[:b], dist, end_pos)
-        return res, new_carry
+            extras.append((bound[:b], dist, end_pos))
+    if return_lastrow:
+        extras.append(lastrow[:b, :m])
+        if track:
+            extras.append(lastrow_start[:b, :m])
+    if extras:
+        return (res, *extras)
     return res

@@ -10,37 +10,70 @@ Mapping of MATSA's mechanisms onto the TPU (DESIGN.md §2):
     is O(N + M) per query instead of O(N·M).
   * wavefront dependency-breaking → the per-row recurrence
         s[j] = d[j] + min(min(prev[j-1], prev[j]), s[j-1])
-    is solved in log2(block_m) lane-shift steps over the (min,+) semiring
-    (Hillis-Steele doubling), instead of MATSA's bit-serial diagonal shifts.
+    is a first-order linear recurrence over the (min, +) semiring, solved
+    by a parallel scan across the lane dimension (see *scan schemes*).
   * query pipelining → the Pallas grid double-buffers the next reference tile
     from HBM while the current one computes.
 
 Grid: (num_query_blocks, num_ref_tiles); the tile dimension is innermost and
-sequential, carrying the DP boundary column in VMEM scratch — the exact
-analogue of MATSA's inter-subarray pass gates (§III-B).
+sequential. The DP boundary column lives in a persistent VMEM *scratch*
+buffer (``scratch_shapes`` — allocated once for the whole grid, so it
+carries across the sequential tile dimension exactly like MATSA's
+inter-subarray pass gates, §III-B) and is read/written **one row slice at
+a time** (``ref[:, pl.ds(i, …)]``): the old scheme re-read and re-wrote
+the full (block_q, N) column per DP row, i.e. O(N²·block_q) VMEM traffic
+per tile — the slice protocol makes it O(N·block_q). The final tile copies
+the scratch into the ``bound`` output so the cross-call chunk-carry
+protocol is unchanged.
 
-Match spans (``track=True``, selected statically by the wrapper when the
-caller asks for spans): every DP lane becomes a lexicographic
+Scan schemes (both exactly associative over the tropical semiring, so
+int32 results are bitwise-identical between them; float32 differs only in
+summation order):
+
+  * ``"shift"`` — Hillis-Steele doubling in log2(block_m) lane-shift
+    steps: the right scheme on TPU hardware, where lane shifts are cheap
+    and the log factor is hidden by the VPU.
+  * ``"assoc"`` — ``lax.associative_scan`` (work-efficient odd-even
+    recursion, O(block_m) combines): the right scheme off-TPU / in
+    interpret mode, where each shift step costs a full memory sweep and
+    the work-efficient form is ~2× faster end to end.
+
+Row tiling: ``row_tile`` consecutive DP rows are processed per loop
+iteration — the boundary-column slice read/write is batched to one
+(block_q, row_tile) access per iteration and the loop-control overhead of
+the row loop (plus the per-row scan set-up) is amortized over the tile.
+The per-row scans themselves stay sequential (row r+1 consumes row r's
+output — the DP's true dependency).
+
+In-kernel last-row capture (``want_lastrow``): the kernel additionally
+emits row ``qlen - 1`` of the DP — the cost of a match *ending* at every
+reference column, i.e. exactly the candidate row
+``repro.core.sdtw.sdtw_chunk_batch_topk`` consumes — so top-K search
+survivors and streaming monitor tiles can score on the kernel path
+instead of falling back to the rowscan. The best/pos/start outputs are
+harvested from this captured row once per tile (each query's ``qlen - 1``
+row is unique), instead of the old per-row candidate bookkeeping.
+
+Match spans (``track=True``): every DP lane becomes a lexicographic
 ``(value, start)`` pair — ``start`` is the row-0 reference column where the
 cell's best path began, with value ties resolved toward the smaller start
 (``repro.core.distances.lex_min``, the single shared rule). The start lane
-rides the Hillis-Steele doubling, the boundary column, and the cross-call
-chunk carry, so streamed slices report exact global ``(start, end)``
-spans. The plain variant keeps PR 2's untaxed lanes (value + end position
-only) — distance/position callers pay nothing for the span feature.
+rides the scan, the boundary column, and the cross-call chunk carry. The
+plain variant keeps the untaxed value+position lanes.
 
-Accumulates in float32 or saturating int32 (see core.distances). Exclusion
-zones are not supported here (ops.py falls back to the rowscan path).
+Accumulates in float32 or saturating int32 (see core.distances).
+Per-query exclusion zones are not supported here (ops.py falls back to the
+rowscan path); the traced ``lead``/``rlen`` window masks a *leading* /
+*trailing* band of columns, which is what the pruned search's halo groups
+and right-padded streaming tails need.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
-from repro.core.distances import INT_FAR, big, lex_min, sat_add
-
-NEG_SHIFT_FILL_A = 0  # identity element of the tropical composition: f(x) = x
+from repro.core.distances import (INT_FAR, big, lex_min, sat_add,
+                                  tropical_combine, tropical_combine_span)
 
 
 def _distance(q, r, metric):
@@ -76,16 +109,39 @@ def _tropical_row_scan(a, u, su, big_val):
     return a, u, su
 
 
-def _sdtw_kernel(metric, n, block_m, track, *refs):
+def _tropical_row_scan_assoc(a, u, su, big_val):
+    """Work-efficient variant of ``_tropical_row_scan`` via
+    ``lax.associative_scan`` over the shared semiring combine. Same
+    contract, same int32 bits (tropical min/+ is exactly associative);
+    ~2× fewer memory sweeps than the shift scheme off-TPU."""
+    if su is None:
+        a_p, u_p = lax.associative_scan(tropical_combine, (a, u), axis=1)
+        return a_p, u_p, None
+    a_p, u_p, su_p = lax.associative_scan(tropical_combine_span, (a, u, su),
+                                          axis=1)
+    return a_p, u_p, su_p
+
+
+_SCAN_SCHEMES = {"shift": _tropical_row_scan,
+                 "assoc": _tropical_row_scan_assoc}
+
+
+def _sdtw_kernel(metric, n, block_m, track, want_lastrow, scheme, row_tile,
+                 *refs):
     """One (query_block, ref_tile) cell of the grid.
 
     Refs, in order (``track=False`` omits every *start* ref — the lanes
-    marked ⊕ exist only in the span variant):
+    marked ⊕ exist only in the span variant; the ``lastrow`` outputs only
+    with ``want_lastrow``):
 
-    q_ref:       (block_q, N)   queries (VMEM)
+    q_ref:       (block_q, N)   queries (VMEM) — read once per tile
     r_ref:       (1, block_m)   reference tile (VMEM)
     qlen_ref:    (block_q, 1)   true query lengths
-    rlen_ref:    (1, 1)         true reference length
+    rlen_ref:    (1, 1)         true reference length (columns >= rlen are
+                                masked; the carry exits at column rlen-1)
+    lead_ref:    (1, 1)         leading banned columns (columns < lead are
+                                masked — the pruned search's left halo pad;
+                                0 for ordinary calls)
     off_ref:     (1, 1)         global column offset of this reference slice
                                 (chunk-carry streaming) — reported match
                                 positions are ``off + local column``
@@ -99,10 +155,9 @@ def _sdtw_kernel(metric, n, block_m, track, *refs):
     start_in_ref:(block_q, 1) ⊕ carry in: start position of that best (-1)
     out_ref:     (block_q, 1)   running per-query best (min over last valid
                                 row)
-    bound_ref:   (block_q, N)   output: boundary column — seeded from the
-                                previous *reference slice* (chunk-carry
-                                protocol), threaded between tiles, and
-                                returned as the carry for the next slice
+    bound_ref:   (block_q, N)   output: boundary column for the next slice
+                                (written from the VMEM scratch on the final
+                                tile — the chunk-carry protocol)
     bound_start_ref:(block_q,N)⊕ output: start lane of the boundary column
     pos_ref:     (block_q, 1)   output: global end position of the best
                                 match (leftmost column attaining it);
@@ -110,127 +165,202 @@ def _sdtw_kernel(metric, n, block_m, track, *refs):
                                 earlier slices/tiles win ties, matching the
                                 rowscan's leftmost ``argmin``
     start_ref:   (block_q, 1) ⊕ output: global start position of that match
-                                (the smallest row-0 column among its
-                                minimum-cost alignments)
+    lastrow_ref: (block_q, block_m) output per tile: row ``qlen - 1`` of
+                                the DP (BIG at masked columns) — the
+                                candidate row for top-K folding
+    lastrow_start_ref: ⊕        its start-pointer lane
+    bscratch:    (block_q, N)   VMEM scratch: the live boundary column,
+                                persistent across the sequential tile grid
+    bsscratch:   (block_q, N) ⊕ VMEM scratch: its start lane
     """
-    if track:
-        (q_ref, r_ref, qlen_ref, rlen_ref, off_ref, bcol_in_ref,
-         bstart_in_ref, best_in_ref, pos_in_ref, start_in_ref, out_ref,
-         bound_ref, bound_start_ref, pos_ref, start_ref) = refs
-    else:
-        (q_ref, r_ref, qlen_ref, rlen_ref, off_ref, bcol_in_ref,
-         best_in_ref, pos_in_ref, out_ref, bound_ref, pos_ref) = refs
+    it = iter(refs)
+    q_ref = next(it)
+    r_ref = next(it)
+    qlen_ref = next(it)
+    rlen_ref = next(it)
+    lead_ref = next(it)
+    off_ref = next(it)
+    bcol_in_ref = next(it)
+    bstart_in_ref = next(it) if track else None
+    best_in_ref = next(it)
+    pos_in_ref = next(it)
+    start_in_ref = next(it) if track else None
+    out_ref = next(it)
+    bound_ref = next(it)
+    bound_start_ref = next(it) if track else None
+    pos_ref = next(it)
+    start_ref = next(it) if track else None
+    lastrow_ref = next(it) if want_lastrow else None
+    lastrow_start_ref = next(it) if (want_lastrow and track) else None
+    bscratch = next(it)
+    bsscratch = next(it) if track else None
+
     t = pl.program_id(1)
+    nt = pl.num_programs(1)
     acc = out_ref.dtype
     BIG = big(acc)
     bq = q_ref.shape[0]
     INT_FAR_ = jnp.int32(INT_FAR)
+    scan = _SCAN_SCHEMES[scheme]
 
+    # Loop invariants, read/computed once per tile (the old kernel re-read
+    # the full q_ref inside every DP row).
+    q = q_ref[...].astype(acc)                       # (bq, N)
     r = r_ref[...].astype(acc)                       # (1, bm)
     qlen = qlen_ref[...].astype(jnp.int32)           # (bq, 1)
     rlen = rlen_ref[0, 0]
+    lead = lead_ref[0, 0]
     off = off_ref[0, 0]
-    j_global = t * block_m + lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
-    col_ok = j_global < rlen                         # (1, bm)
+    j_local = t * block_m + lax.broadcasted_iota(jnp.int32, (1, block_m), 1)
+    col_ok = (j_local >= lead) & (j_local < rlen)    # (1, bm)
+    gcol = jnp.broadcast_to(off + j_local, (bq, block_m))
+    lane0 = lax.broadcasted_iota(jnp.int32, (bq, block_m), 1) == 0
+    last_local = jnp.clip(rlen - 1 - t * block_m, 0, block_m - 1)
+    in_tile = t * block_m < rlen
 
     @pl.when(t == 0)
     def _init():
         out_ref[...] = best_in_ref[...]
-        bound_ref[...] = bcol_in_ref[...]
         pos_ref[...] = pos_in_ref[...]
+        bscratch[...] = bcol_in_ref[...]
         if track:
-            bound_start_ref[...] = bstart_in_ref[...]
             start_ref[...] = start_in_ref[...]
+            bsscratch[...] = bstart_in_ref[...]
 
-    best0 = out_ref[...]                             # (bq, 1)
-    pos0 = pos_ref[...]                              # (bq, 1)
-    sstart0 = start_ref[...] if track else pos0      # (bq, 1)
-
-    def row_body(i, carry):
-        prev, pstart, b_im1, bs_im1, best, pos, sbest = carry
-        qi = jax.lax.dynamic_slice_in_dim(q_ref[...], i, 1, axis=1).astype(acc)
-        d = _distance(qi, r, metric)                 # (bq, bm) broadcast
+    def one_row(i, prev, pstart, b_im1, bs_im1, b_row, bs_row, lrow, lstart):
+        """One DP row. ``b_row``/``bs_row`` are the boundary column's row-i
+        entries from the *previous* tile (read before overwrite);
+        ``b_im1``/``bs_im1`` are row i-1's. Returns the new row state plus
+        this row's boundary exit values."""
+        qi = lax.dynamic_slice_in_dim(q, i, 1, axis=1)       # (bq, 1)
+        d = _distance(qi, r, metric)                         # (bq, bm)
         d = jnp.where(col_ok, d, BIG)
 
-        # Boundary from the previous tile, row i (read BEFORE overwrite).
-        b_row = jax.lax.dynamic_slice_in_dim(bound_ref[...], i, 1, axis=1)
-
         # prev shifted right by one lane; lane 0 takes the diagonal boundary.
-        lane0 = lax.broadcasted_iota(jnp.int32, prev.shape, 1) == 0
         prev_sh = jnp.pad(prev, ((0, 0), (1, 0)),
                           constant_values=0)[:, :block_m]
         prev_sh = jnp.where(lane0, b_im1, prev_sh)
         if track:
-            bs_row = jax.lax.dynamic_slice_in_dim(bound_start_ref[...], i,
-                                                  1, axis=1)
             pstart_sh = jnp.pad(pstart, ((0, 0), (1, 0)),
                                 constant_values=INT_FAR)[:, :block_m]
             pstart_sh = jnp.where(lane0, bs_im1, pstart_sh)
-            # lexmin(S[i-1,j-1], S[i-1,j]) with its start lane
-            m, ms = lex_min(prev_sh, pstart_sh, prev, pstart)
+            mn, mns = lex_min(prev_sh, pstart_sh, prev, pstart)
         else:
-            bs_row = bs_im1
-            m, ms = jnp.minimum(prev_sh, prev), None
+            mn, mns = jnp.minimum(prev_sh, prev), None
 
-        u = sat_add(d, m)
-        a = d
-        a_p, u_p, su_p = _tropical_row_scan(a, u, ms, BIG)
+        u = sat_add(d, mn)
+        a_p, u_p, su_p = scan(d, u, mns, BIG)
         if track:
             s_rec, ss_rec = lex_min(u_p, su_p, sat_add(a_p, b_row), bs_row)
-            gstart = jnp.broadcast_to(off + j_global, (bq, block_m))
-            sstart = jnp.where(i == 0, gstart, ss_rec)
+            sstart = jnp.where(i == 0, gcol, ss_rec)
         else:
             s_rec = jnp.minimum(u_p, sat_add(a_p, b_row))
-            sstart = pstart                          # unused dummy
-        s = jnp.where(i == 0, d, s_rec)              # free-start row
+            sstart = pstart                                  # unused dummy
+        s = jnp.where(i == 0, d, s_rec)                      # free-start row
         s = jnp.where(col_ok, s, BIG)
         if track:
             sstart = jnp.where(col_ok, sstart, INT_FAR_)
 
-        # Record min over the last valid row of each query, plus the
-        # leftmost global column attaining it (strict < so earlier
-        # tiles/slices keep ties) and — in span mode — that cell's start.
-        row_min = jnp.min(s, axis=1, keepdims=True)
+        # Capture row qlen-1 (each query hits it exactly once per tile).
         at_last = i == qlen - 1
-        is_min = s == row_min
-        cand = jnp.min(jnp.where(is_min,
-                                 jnp.broadcast_to(off + j_global, s.shape),
-                                 INT_FAR_), axis=1, keepdims=True)
-        improve = at_last & (row_min < best)
-        pos = jnp.where(improve, cand.astype(jnp.int32), pos)
+        lrow = jnp.where(at_last, s, lrow)
         if track:
-            at_cand = is_min & (jnp.broadcast_to(off + j_global, s.shape)
-                                == cand)
-            cand_start = jnp.min(jnp.where(at_cand, sstart, INT_FAR_),
-                                 axis=1, keepdims=True)
-            sbest = jnp.where(improve, cand_start.astype(jnp.int32), sbest)
-        best = jnp.where(at_last, jnp.minimum(best, row_min), best)
+            lstart = jnp.where(at_last, sstart, lstart)
 
-        # Persist this tile's last *valid* column as the next boundary (the
+        # This tile's last *valid* column is the next boundary (the
         # returned carry must be S[:, rlen-1], not a BIG padding lane, for
         # cross-call chaining to be exact); a tile past rlen keeps b_row.
-        last_local = jnp.clip(rlen - 1 - t * block_m, 0, block_m - 1)
-        sel = lax.broadcasted_iota(jnp.int32, s.shape, 1) == last_local
-        in_tile = t * block_m < rlen
-        new_b = jnp.min(jnp.where(sel, s, BIG), axis=1, keepdims=True)
-        new_b = jnp.where(in_tile, new_b, b_row)
-        bound_ref[...] = jax.lax.dynamic_update_slice_in_dim(
-            bound_ref[...], new_b, i, axis=1)
+        new_b = jnp.where(
+            in_tile, lax.dynamic_slice_in_dim(s, last_local, 1, axis=1),
+            b_row)
+        new_bs = bs_row
         if track:
-            new_bs = jnp.min(jnp.where(sel, sstart, INT_FAR_), axis=1,
-                             keepdims=True)
-            new_bs = jnp.where(in_tile, new_bs, bs_row)
-            bound_start_ref[...] = jax.lax.dynamic_update_slice_in_dim(
-                bound_start_ref[...], new_bs, i, axis=1)
-        return s, sstart, b_row, bs_row, best, pos, sbest
+            new_bs = jnp.where(
+                in_tile,
+                lax.dynamic_slice_in_dim(sstart, last_local, 1, axis=1),
+                bs_row)
+        return s, sstart, lrow, lstart, new_b, new_bs
+
+    def row_block(i0, prev, pstart, b_im1, bs_im1, lrow, lstart, width):
+        """``width`` consecutive rows with one batched boundary-column
+        slice read/write (``width`` is static — either ``row_tile`` or the
+        tail remainder)."""
+        bslab = bscratch[:, pl.ds(i0, width)]                # (bq, width)
+        bsslab = bsscratch[:, pl.ds(i0, width)] if track else None
+        new_cols, new_scols = [], []
+        for rr in range(width):
+            b_row = bslab[:, rr:rr + 1]
+            bs_row = bsslab[:, rr:rr + 1] if track else None
+            prev, pstart, lrow, lstart, nb, nbs = one_row(
+                i0 + rr, prev, pstart, b_im1, bs_im1, b_row, bs_row,
+                lrow, lstart)
+            b_im1, bs_im1 = b_row, bs_row
+            new_cols.append(nb)
+            new_scols.append(nbs)
+        bscratch[:, pl.ds(i0, width)] = jnp.concatenate(new_cols, axis=1)
+        if track:
+            bsscratch[:, pl.ds(i0, width)] = jnp.concatenate(new_scols,
+                                                             axis=1)
+        return prev, pstart, b_im1, bs_im1, lrow, lstart
 
     prev0 = jnp.full((bq, block_m), BIG, acc)
     pstart0 = jnp.full((bq, block_m), INT_FAR_, jnp.int32)
     b0 = jnp.full((bq, 1), BIG, acc)
     bs0 = jnp.full((bq, 1), INT_FAR_, jnp.int32)
-    _, _, _, _, best, pos, sbest = lax.fori_loop(
-        0, n, row_body, (prev0, pstart0, b0, bs0, best0, pos0, sstart0))
-    out_ref[...] = best
-    pos_ref[...] = pos
+    lrow0 = jnp.full((bq, block_m), BIG, acc)
+    lstart0 = jnp.full((bq, block_m), INT_FAR_, jnp.int32)
+
+    n_main, n_tail = divmod(n, row_tile)
     if track:
-        start_ref[...] = sbest
+        def body(ib, carry):
+            return row_block(ib * row_tile, *carry, row_tile)
+
+        carry = (prev0, pstart0, b0, bs0, lrow0, lstart0)
+        carry = lax.fori_loop(0, n_main, body, carry)
+        if n_tail:
+            carry = row_block(n_main * row_tile, *carry, n_tail)
+        _, _, _, _, lrow, lstart = carry
+    else:
+        # Keep the loop carry lean in the plain variant (no start lanes).
+        def body(ib, carry):
+            prev, b_im1, lrow = carry
+            prev, _, b_im1, _, lrow, _ = row_block(
+                ib * row_tile, prev, pstart0, b_im1, bs0, lrow, lstart0,
+                row_tile)
+            return prev, b_im1, lrow
+
+        prev, b_im1, lrow = lax.fori_loop(0, n_main, body,
+                                          (prev0, b0, lrow0))
+        if n_tail:
+            _, _, _, _, lrow, _ = row_block(
+                n_main * row_tile, prev, pstart0, b_im1, bs0, lrow, lstart0,
+                n_tail)
+        lstart = lstart0
+
+    # Harvest best / end position / start from the captured last row, once
+    # per tile (the old kernel paid this bookkeeping on every DP row).
+    best0 = out_ref[...]
+    pos0 = pos_ref[...]
+    row_min = jnp.min(lrow, axis=1, keepdims=True)
+    is_min = lrow == row_min
+    cand = jnp.min(jnp.where(is_min, gcol, INT_FAR_), axis=1, keepdims=True)
+    improve = row_min < best0      # strict: earlier tiles/slices keep ties
+    out_ref[...] = jnp.minimum(best0, row_min)
+    pos_ref[...] = jnp.where(improve, cand.astype(jnp.int32), pos0)
+    if track:
+        start0 = start_ref[...]
+        at_cand = is_min & (gcol == cand)
+        cand_start = jnp.min(jnp.where(at_cand, lstart, INT_FAR_), axis=1,
+                             keepdims=True)
+        start_ref[...] = jnp.where(improve, cand_start.astype(jnp.int32),
+                                   start0)
+    if want_lastrow:
+        lastrow_ref[...] = lrow
+        if track:
+            lastrow_start_ref[...] = lstart
+
+    @pl.when(t == nt - 1)
+    def _emit_bound():
+        bound_ref[...] = bscratch[...]
+        if track:
+            bound_start_ref[...] = bsscratch[...]

@@ -49,7 +49,8 @@ import numpy as np
 from repro.core import engine
 from repro.core.distances import accum_dtype
 from repro.core.sdtw import (default_excl_zone, sdtw_carry_init,
-                             sdtw_chunk_batch_topk, sdtw_segment)
+                             sdtw_chunk_batch_topk, sdtw_segment,
+                             topk_fold_lastrow)
 from repro.core.topk import topk_init
 
 from . import cache as cache_mod
@@ -99,10 +100,11 @@ def default_chunk(m: int, n: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "chunk", "halo", "k",
-                                             "excl_span"))
+                                             "excl_span", "engine_impl"))
 def _pruned_chunk_step(queries, qlens, seg, heap_d, heap_p, heap_s, j0,
                        m_total, excl_lo, excl_hi, excl_zone, *, metric,
-                       chunk, halo, k, excl_span):
+                       chunk, halo, k, excl_span,
+                       engine_impl: str = "rowscan"):
     """Score one surviving chunk and fold its candidates into the heap.
 
     ``seg`` is the chunk plus ``halo`` left-context chunks; the DP runs
@@ -112,9 +114,29 @@ def _pruned_chunk_step(queries, qlens, seg, heap_d, heap_p, heap_s, j0,
     (value *and* start-pointer lanes, so candidate spans beginning inside
     the halo are exact) so any match with span ≤ halo·chunk is scored
     with full context.
+
+    ``engine_impl='pallas'`` scores the whole halo group in one kernel
+    call using the in-kernel last-row capture (the group's leading pad /
+    trailing overhang are masked via the kernel's traced ``ref_lead`` /
+    ``ref_len`` window) and folds the identical candidate row with the
+    identical per-chunk ``topk_merge`` — int32 heaps are bitwise-equal to
+    the rowscan variant. Requires no per-query exclusion zones (the
+    caller checks).
     """
     nq, n = queries.shape
     acc = accum_dtype(jnp.result_type(queries, seg))
+    if engine_impl == "pallas":
+        from repro.kernels.sdtw import sdtw_pallas
+        seg_len = seg.shape[0]
+        _, lrow, lstart = sdtw_pallas(
+            queries, seg, qlens, metric, track_start=True,
+            return_lastrow=True, ref_offset=j0,
+            ref_len=jnp.clip(m_total - j0, 0, seg_len),
+            ref_lead=jnp.maximum(0, -j0))
+        return topk_fold_lastrow(
+            (heap_d.astype(acc), heap_p, heap_s),
+            lrow[:, halo * chunk:], lstart[:, halo * chunk:],
+            j0 + halo * chunk, k, excl_zone, excl_span)
     carry = sdtw_carry_init(nq, n, acc, track_start=True)
     if halo:
         carry = sdtw_segment(queries, seg[:halo * chunk], qlens, carry, j0,
@@ -128,7 +150,8 @@ def _pruned_chunk_step(queries, qlens, seg, heap_d, heap_p, heap_s, j0,
 
 
 def _search_padded(queries, reference, qlens, *, k, metric, chunk, prune,
-                   halo, excl_zone, excl_mode, excl_lo, excl_hi, env):
+                   halo, excl_zone, excl_mode, excl_lo, excl_hi, env,
+                   engine_impl="rowscan"):
     """Pruned search for one padded (nq, N) bucket. Returns
     (dists, positions, starts, stats_tuple)."""
     nq, n = queries.shape
@@ -186,7 +209,7 @@ def _search_padded(queries, reference, qlens, *, k, metric, chunk, prune,
             queries, qlens, group, heap_d, heap_p, heap_s,
             jnp.int32((c - halo) * chunk), jnp.int32(m), excl_lo, excl_hi,
             zone, metric=metric, chunk=chunk, halo=halo, k=k,
-            excl_span=(excl_mode == "span"))
+            excl_span=(excl_mode == "span"), engine_impl=engine_impl)
         thr = np.asarray(heap_d[:, -1], np.float64)
     return heap_d, heap_p, heap_s, (n_chunks, pruned_kim, pruned_keogh,
                                     processed)
@@ -199,7 +222,7 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
                 normalize: bool = False,
                 excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
                 cache: Optional[cache_mod.EnvelopeCache] = None,
-                ref_key=None) -> SearchResult:
+                ref_key=None, engine_impl: str = "auto") -> SearchResult:
     """Top-K subsequence matches of each query in ``reference``.
 
     Args:
@@ -229,6 +252,11 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
       cache:     ``EnvelopeCache`` for the per-reference envelope
                  (default: the module-level ``DEFAULT_CACHE``).
       ref_key:   stable cache key for the reference (recommended).
+      engine_impl: DP backend for scoring surviving chunks: 'rowscan'
+                 (the chunked tile loop) or 'pallas' (the kernel's
+                 in-kernel last-row capture — int32 heaps bitwise-equal
+                 to rowscan). 'auto' picks pallas on a TPU backend when
+                 no per-query exclusion zones are set.
 
     Returns a ``SearchResult``; distances/positions/starts are (nq, k)
     (or (k,) for a single 1-D query), best first, ``(BIG, -1, -1)``-padded
@@ -246,6 +274,16 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
         raise ValueError("mesh= runs the sharded engine over every chunk; "
                          "pass prune=False explicitly (the LB cascade is "
                          "single-process)")
+    if engine_impl not in ("auto", "rowscan", "pallas"):
+        raise ValueError(f"engine_impl must be 'auto', 'rowscan' or "
+                         f"'pallas', got {engine_impl!r}")
+    has_excl = excl_lo is not None or excl_hi is not None
+    if engine_impl == "pallas" and has_excl:
+        raise ValueError("the pallas kernel does not support per-query "
+                         "exclusion zones; use engine_impl='rowscan'")
+    if engine_impl == "auto":
+        engine_impl = ("pallas" if jax.default_backend() == "tpu"
+                       and not has_excl else "rowscan")
     reference = jnp.asarray(reference)
     if normalize:
         reference = znorm(reference)
@@ -314,7 +352,8 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
             d, p, s, stats = _search_padded(
                 bq, reference, bql, k=k, metric=metric, chunk=c,
                 prune=prune, halo=halo, excl_zone=excl_zone,
-                excl_mode=excl_mode, excl_lo=blo, excl_hi=bhi, env=env)
+                excl_mode=excl_mode, excl_lo=blo, excl_hi=bhi, env=env,
+                engine_impl=engine_impl)
         for t in range(4):
             totals[t] += stats[t]
         d = np.asarray(d)

@@ -13,7 +13,11 @@ query by that chunk through the *same* ``sdtw_rowscan_chunk`` /
 protocol is already chunk-size-invariant, any partition of the reference
 fed through a session reproduces ``engine.sdtw`` distances, spans and
 top-K *bitwise* (int32) — the differential property ``tests/test_stream.py``
-enforces.
+enforces. On the Pallas impl, top-K heaps, threshold alerts and online
+pruning all consume the kernel's in-kernel last-row capture (the per-tile
+candidate row), folded with the identical ``topk_fold_lastrow`` merge the
+rowscan path uses, so both impls produce the same bits; only per-query
+exclusion zones still require ``impl='rowscan'``.
 
 Mechanics that make streaming practical:
 
@@ -76,7 +80,8 @@ import numpy as np
 from repro.core import engine as engine_mod
 from repro.core.distances import accum_dtype, big
 from repro.core.sdtw import (default_excl_zone, sdtw_carry_init,
-                             sdtw_chunk_batch, sdtw_chunk_batch_topk)
+                             sdtw_chunk_batch, sdtw_chunk_batch_topk,
+                             topk_fold_lastrow)
 from repro.core.topk import topk_init
 from repro.search import cache as cache_mod
 from repro.search.lower_bounds import chunk_envelope, lb_cascade
@@ -159,6 +164,37 @@ def _plain_step(queries, tile, qlens, carry, j0, m_total, clen, lo, hi, *,
                             metric, lo, hi, clen=clen)
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_m",
+                                             "k", "excl_span", "track",
+                                             "want_lastrow", "with_heap"))
+def _pallas_step(queries, tile, qlens, kcarry, heap, j0, clen, zone, *,
+                 metric, block_q, block_m, k, excl_span, track,
+                 want_lastrow, with_heap):
+    """One streamed tile through the Pallas kernel: advance the kernel
+    chunk carry and — when the session consumes candidate rows — fold the
+    in-kernel last-row capture into the top-K heap with the identical
+    per-tile ``topk_merge`` the rowscan path runs, so pallas sessions
+    reproduce the offline chunked heap bitwise (int32)."""
+    from repro.kernels.sdtw import sdtw_pallas
+    out = sdtw_pallas(queries, tile, qlens, metric, block_q=block_q,
+                      block_m=block_m, carry=kcarry, return_carry=True,
+                      ref_offset=j0, ref_len=clen, track_start=track,
+                      return_lastrow=want_lastrow)
+    if not want_lastrow:
+        _, kc = out
+        return kc, None, None
+    if track:
+        _, kc, lrow, lstart = out
+    else:
+        _, kc, lrow = out
+        lstart = None
+    if with_heap:
+        heap = topk_fold_lastrow(heap, lrow, lstart, j0, k, zone,
+                                 excl_span)
+        return kc + tuple(heap), lrow, lstart
+    return kc, lrow, lstart
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "k", "excl_span",
                                              "track", "lastrow"))
 def _heap_step(queries, tile, qlens, carry, j0, m_total, clen, lo, hi, zone,
@@ -188,7 +224,8 @@ class StreamSession:
                  alert_threshold=None,
                  on_alert: Optional[Callable[[AlertEvent], None]] = None,
                  cache: Optional[cache_mod.EnvelopeCache] = None,
-                 ref_key=None, block_q: int = 8, block_m: int = 512):
+                 ref_key=None, block_q: Optional[int] = None,
+                 block_m: Optional[int] = None):
         if impl not in ("rowscan", "pallas"):
             raise ValueError(f"impl must be 'rowscan' or 'pallas' for a "
                              f"stream session, got {impl!r}")
@@ -209,18 +246,9 @@ class StreamSession:
             raise ValueError("alerts need every tile's candidate row, "
                              "which pruning skips; use prune=False for a "
                              "threshold monitor")
-        if impl == "pallas":
-            if top_k is not None or prune:
-                raise ValueError("the pallas kernel carries only the best "
-                                 "match; top_k=/prune= run on "
-                                 "impl='rowscan'")
-            if excl_lo is not None:
-                raise ValueError("the pallas kernel does not support "
-                                 "exclusion zones; use impl='rowscan'")
-            if alert_threshold is not None:
-                raise ValueError("alerts need the per-tile candidate row, "
-                                 "which the pallas carry does not expose; "
-                                 "use impl='rowscan'")
+        if impl == "pallas" and excl_lo is not None:
+            raise ValueError("the pallas kernel does not support "
+                             "exclusion zones; use impl='rowscan'")
 
         self.metric = metric
         self.impl = impl
@@ -332,14 +360,24 @@ class StreamSession:
         consumed; the start lane only when spans/span-suppression need
         it. Derived in exactly one place so ``restore()`` can never
         unpack carries under a different layout than the session that
-        snapshotted them."""
+        snapshotted them.
+
+        The pallas kernel tracks the top-1 (value, end, start) natively
+        in its own carry, so a pallas session appends the heap triple to
+        the kernel carry only for a real top-K, and asks the kernel for
+        its in-kernel last-row capture exactly when a candidate row is
+        consumed (top-K folding or threshold alerts)."""
         self._k = 1 if self.top_k is None else self.top_k
-        self._wants_heap = (self.impl == "rowscan"
-                            and (self.top_k is not None or self.return_spans
-                                 or self.return_positions
-                                 or self.alert_threshold is not None))
+        if self.impl == "pallas":
+            self._wants_heap = self.top_k is not None
+            self._want_lastrow = (self.top_k is not None
+                                  or self.alert_threshold is not None)
+        else:
+            self._wants_heap = (self.top_k is not None or self.return_spans
+                                or self.return_positions
+                                or self.alert_threshold is not None)
+            self._want_lastrow = self.alert_threshold is not None
         self._track = self.return_spans or self.excl_mode == "span"
-        self._want_lastrow = self.alert_threshold is not None
 
     def _acc(self, b: _Bucket):
         ref_dtype = self._dtype if self._dtype is not None \
@@ -350,10 +388,18 @@ class StreamSession:
     def _fresh_carry(self, b: _Bucket):
         nb, n = b.queries.shape
         acc = self._acc(b)
-        if self.impl == "pallas":
-            return None              # built lazily by the kernel wrapper
         if self.prune:
+            # Pruned mode scores surviving tiles from fresh halo-warmed
+            # carries (on either impl) — the session carry is the heap.
             return topk_init(nb, self._k, acc)
+        if self.impl == "pallas":
+            if self._dtype is None:
+                return None          # accumulator unknown until first feed
+            from repro.kernels.sdtw import pallas_carry_init
+            kc = pallas_carry_init(nb, n, acc, track_start=self._track)
+            if self._wants_heap:
+                return kc + topk_init(nb, self._k, acc)
+            return kc
         if self._wants_heap:
             return (sdtw_carry_init(nb, n, acc, track_start=self._track)
                     + topk_init(nb, self._k, acc))
@@ -383,7 +429,7 @@ class StreamSession:
         if self._dtype is None:
             self._dtype = data.dtype
             self._buf = np.zeros((0,), data.dtype)
-            if self._offset == 0 and self.impl != "pallas":
+            if self._offset == 0:
                 # The carry's accumulator dtype depends on the stream's —
                 # rebuild the untouched fresh carries now that it is known.
                 for b in self._buckets:
@@ -423,7 +469,7 @@ class StreamSession:
             for b in self._buckets:
                 out = self._step_exact(b, tile, j0, clen, b.carry)
                 b.carry, lrow, lstart = out
-                if self._want_lastrow:
+                if self.alert_threshold is not None:
                     self._emit_alerts(b, lrow, lstart, j0, clen)
             self.tiles_processed += 1      # exact mode runs every tile
         self.tiles_total += 1
@@ -435,13 +481,16 @@ class StreamSession:
         m_tot = jnp.int32(j0 + clen)
         cl = jnp.int32(clen)
         if self.impl == "pallas":
-            from repro.kernels.sdtw import sdtw_pallas
-            _, new = sdtw_pallas(b.queries, tile, b.qlens, self.metric,
-                                 block_q=self.block_q, block_m=self.block_m,
-                                 carry=carry, return_carry=True,
-                                 ref_offset=j0_t, track_start=self._track,
-                                 ref_len=cl)
-            return new, None, None
+            kc = carry[:-3] if self._wants_heap else carry
+            heap = carry[-3:] if self._wants_heap else None
+            new, lrow, lstart = _pallas_step(
+                b.queries, tile, b.qlens, kc, heap, j0_t, cl, b.zone,
+                metric=self.metric, block_q=self.block_q,
+                block_m=self.block_m, k=self._k,
+                excl_span=self.excl_mode == "span", track=self._track,
+                want_lastrow=self._want_lastrow,
+                with_heap=self._wants_heap)
+            return new, lrow, lstart
         if self._wants_heap:
             return _heap_step(b.queries, tile, b.qlens, carry, j0_t, m_tot,
                               cl, b.lo, b.hi, b.zone, metric=self.metric,
@@ -544,7 +593,8 @@ class StreamSession:
             heap[2], jnp.int32(j0 - b.halo * self.chunk),
             jnp.int32(j0 + clen), b.lo, b.hi, b.zone, metric=self.metric,
             chunk=self.chunk, halo=b.halo, k=self._k,
-            excl_span=self.excl_mode == "span")
+            excl_span=self.excl_mode == "span",
+            engine_impl=self.impl)
         return "processed", (hd, hp, hs)
 
     # ------------------------------------------------------------------
@@ -593,21 +643,24 @@ class StreamSession:
              or self.return_spans)
         for bi, b in enumerate(self._buckets):
             carry = carries[bi]
-            if self.impl == "pallas":
+            if self.prune:
+                d, p, s = (np.asarray(x) for x in carry)
+            elif self.impl == "pallas":
                 if carry is None:
                     acc = self._acc(b)
                     nb = b.queries.shape[0]
-                    d = np.full((nb,), big(acc), acc)
-                    p = np.full((nb,), -1, np.int32)
-                    s = np.full((nb,), -1, np.int32)
-                elif self._track:
-                    _, _, d, p, s = (np.asarray(x) for x in carry)
+                    d = np.full((nb, kk), big(acc), acc)
+                    p = np.full((nb, kk), -1, np.int32)
+                    s = np.full((nb, kk), -1, np.int32)
+                elif self._wants_heap:
+                    d, p, s = (np.asarray(x) for x in carry[-3:])
                 else:
-                    _, d, p = (np.asarray(x) for x in carry)
-                    s = np.full_like(p, -1)
-                d, p, s = d[:, None], p[:, None], s[:, None]  # (nb, 1)
-            elif self.prune:
-                d, p, s = (np.asarray(x) for x in carry)
+                    if self._track:
+                        _, _, d, p, s = (np.asarray(x) for x in carry)
+                    else:
+                        _, d, p = (np.asarray(x) for x in carry)
+                        s = np.full_like(p, -1)
+                    d, p, s = d[:, None], p[:, None], s[:, None]  # (nb, 1)
             elif self._wants_heap:
                 d, p, s = (np.asarray(x) for x in carry[-3:])
             else:

@@ -228,7 +228,7 @@ def test_forced_impl_contradictions_rejected():
         (dict(impl="pallas", mesh=mesh), "single-device"),
         (dict(impl="chunked", mesh=mesh), "single-device"),
         (dict(impl="rowscan", top_k=2), "top-K heap"),
-        (dict(impl="pallas", top_k=2), "best end position"),
+        (dict(impl="pallas", top_k=2), "single best match"),
         (dict(top_k=0), "positive int"),
     ]
     for kw, match in cases:

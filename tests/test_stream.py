@@ -357,8 +357,10 @@ def test_stream_argument_validation(rng):
         stream(q, prune=True)
     with pytest.raises(ValueError, match="alerts"):
         stream(q, top_k=2, prune=True, alert_threshold=1)
-    with pytest.raises(ValueError, match="pallas"):
-        stream(q, impl="pallas", top_k=2)
+    # top_k/alerts/prune ride the kernel's last-row capture now; only
+    # per-query exclusion zones still force the rowscan tile loop.
+    with pytest.raises(ValueError, match="exclusion"):
+        stream(q, impl="pallas", excl_lo=1, excl_hi=3)
     with pytest.raises(ValueError, match="excl_mode"):
         stream(q, excl_mode="span")
     with pytest.raises(ValueError, match="together"):
