@@ -193,6 +193,34 @@ def main(smoke: bool = False):
         f"sdtw_kernel/stream_topk_b{bl}_n{nl}_m{ml}_c{tile}", us_k,
         f"Mcells_per_s={rate:.1f};offline_ratio={us_k/us_offk:.2f}x;"
         f"streamed_vs_offline={'equal' if eq else 'DIFFERS'}"))
+
+    # Sharded scaling: cells/s vs device count at FIXED work, each row
+    # bitwise-gated against the single-device engine. One device means one
+    # row — the CI bench-smoke job forces 8 fake CPU devices
+    # (XLA_FLAGS=--xla_force_host_platform_device_count=8) so the sweep
+    # covers 1/2/4/8-way systolic meshes plus a 2D (dp, mp) mesh.
+    from repro.distributed import get_mesh
+    devs = jax.devices()
+    bs, ns, ms = (4, 8, 2048) if smoke else (8, 32, 1 << 16)
+    qsh = jnp.asarray(rng.integers(-100, 100, (bs, ns)).astype(np.int32))
+    rsh = jnp.asarray(rng.integers(-100, 100, ms).astype(np.int32))
+    csh = 256 if smoke else 8192
+    want_sh = np.asarray(sdtw(qsh, rsh, impl="chunked", chunk=csh))
+    cells_s = bs * ns * ms
+    shapes = [(c,) for c in (1, 2, 4, 8) if c <= len(devs)]
+    if len(devs) >= 4:
+        shapes.append((2, len(devs) // 2))   # 2D: dp rows x systolic mp
+    for shape in shapes:
+        nd = int(np.prod(shape))
+        mesh = get_mesh(shape, devices=devs[:nd])
+        fn = functools.partial(sdtw, qsh, rsh, mesh=mesh, chunk=csh)
+        us = time_call(fn, repeats=3, warmup=1)
+        eq = np.array_equal(np.asarray(fn()), want_sh)
+        tag = "x".join(str(s) for s in shape)
+        rows.append(emit(
+            f"sdtw_kernel/sharded_scaling_b{bs}_n{ns}_m{ms}_mesh{tag}", us,
+            f"Mcells_per_s={cells_s / (us * 1e-6) / 1e6:.1f};ndev={nd};"
+            f"sharded_vs_engine={'equal' if eq else 'DIFFERS'}"))
     return rows
 
 

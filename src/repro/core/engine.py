@@ -180,9 +180,43 @@ def _check_forced_impl(impl: str, *, mesh, chunk, top_k):
             "impl='sharded'/'auto'")
 
 
+def _resolve_mesh(mesh, mesh_shape):
+    """``mesh_shape=`` builds the (dp, mp) mesh via the distributed layer."""
+    if mesh_shape is None:
+        return mesh
+    if mesh is not None:
+        raise ValueError("pass either mesh= (a prebuilt jax Mesh) or "
+                         "mesh_shape= (built for you), not both")
+    from repro.distributed.sharding import get_mesh
+    return get_mesh(mesh_shape)
+
+
+def _check_sharded_args(*, mesh, impl, n_micro, excl_zone, top_k,
+                        return_positions):
+    """Loud, stream()-style rejection of options the sharded path cannot
+    honour — instead of silently mishandling them deep in the driver."""
+    sharded = mesh is not None or impl == "sharded"
+    if n_micro is not None and not sharded:
+        raise ValueError("n_micro= schedules the sharded systolic "
+                         "pipeline; pass mesh=/mesh_shape= (or "
+                         "impl='sharded') or drop n_micro=")
+    if not sharded:
+        return
+    if excl_zone is not None and np.ndim(excl_zone) != 0:
+        raise ValueError("the sharded driver takes a scalar excl_zone (or "
+                         "None for the per-query default); per-query zone "
+                         "arrays run on the single-device chunked path "
+                         "(drop mesh=)")
+    if return_positions and top_k is not None:
+        raise ValueError("top_k= already returns (dists, positions) on "
+                         "the sharded driver; return_positions=True adds "
+                         "nothing there — drop it (or use return_spans=)")
+
+
 def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
          impl: str = "auto", chunk: Optional[int] = None,
-         excl_lo=None, excl_hi=None, mesh=None, ref_axis: str = "ref",
+         excl_lo=None, excl_hi=None, mesh=None, mesh_shape=None,
+         ref_axis: str = "ref", n_micro: Optional[int] = None,
          top_k: Optional[int] = None, return_positions: bool = False,
          return_spans: bool = False, excl_zone: Optional[int] = None,
          excl_mode: str = "end", block_q: Optional[int] = None,
@@ -204,7 +238,16 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
       excl_lo/excl_hi: banned reference column range per query (self-join
                  exclusion zones); scalar or (nq,).
       mesh:      a jax Mesh whose ``ref_axis`` shards the reference axis;
-                 forces the sharded driver under 'auto'.
+                 forces the sharded driver under 'auto'. A 2-D (dp, mp)
+                 mesh (see ``repro.distributed.get_mesh``) additionally
+                 shards query microbatches over the dp rows.
+      mesh_shape: build the mesh for you — an int, ``(mp,)`` or
+                 ``(dp, mp)`` tuple (``-1`` wildcards allowed) passed to
+                 ``repro.distributed.get_mesh``; mutually exclusive with
+                 ``mesh``.
+      n_micro:   microbatch count per dp row for the sharded systolic
+                 schedule (default fills the pipeline); results are
+                 bitwise-invariant to it for int32 inputs.
       top_k:     return the k best match end positions per query as
                  ``(dists (nq, k), positions (nq, k))``, best first,
                  suppressed so positions are > ``excl_zone`` apart.
@@ -238,14 +281,19 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     if excl_mode == "span" and top_k is None:
         raise ValueError("excl_mode='span' only affects top-K suppression; "
                          "pass top_k= (k=1 selection never suppresses)")
+    mesh = _resolve_mesh(mesh, mesh_shape)
     _check_forced_impl(impl, mesh=mesh, chunk=chunk, top_k=top_k)
+    _check_sharded_args(mesh=mesh, impl=impl, n_micro=n_micro,
+                        excl_zone=excl_zone, top_k=top_k,
+                        return_positions=return_positions)
 
     if _is_ragged(queries):
         if qlens is not None:
             raise ValueError("qlens is implied by ragged (list) queries")
         return _sdtw_ragged(queries, reference, metric=metric, impl=impl,
                             chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
-                            mesh=mesh, ref_axis=ref_axis, top_k=top_k,
+                            mesh=mesh, ref_axis=ref_axis, n_micro=n_micro,
+                            top_k=top_k,
                             return_positions=return_positions,
                             return_spans=return_spans, excl_zone=excl_zone,
                             excl_mode=excl_mode,
@@ -297,7 +345,7 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     else:  # sharded
         from repro.distributed.sdtw_sharded import sdtw_sharded
         out = sdtw_sharded(queries, reference, qlens, metric=metric,
-                           mesh=mesh, axis=ref_axis,
+                           mesh=mesh, axis=ref_axis, n_micro=n_micro,
                            chunk=chunk or DEFAULT_CHUNK,
                            excl_lo=_normalize_excl(excl_lo, nq),
                            excl_hi=_normalize_excl(excl_hi, nq),
@@ -312,7 +360,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
 
 def stream(queries, *, qlens=None, metric: str = "abs_diff",
            impl: str = "auto", chunk: Optional[int] = None,
-           mesh=None, ref_axis: str = "ref", n_micro: Optional[int] = None,
+           mesh=None, mesh_shape=None,
+           ref_axis: str = "ref", n_micro: Optional[int] = None,
            top_k: Optional[int] = None, excl_zone=None,
            excl_mode: str = "end", return_spans: bool = False,
            return_positions: bool = False, excl_lo=None, excl_hi=None,
@@ -347,6 +396,11 @@ def stream(queries, *, qlens=None, metric: str = "abs_diff",
         raise ValueError(
             f"impl must be 'auto', 'rowscan', 'pallas' or 'sharded' for "
             f"streaming, got {impl!r}")
+    mesh = _resolve_mesh(mesh, mesh_shape)
+    if n_micro is not None and mesh is None and impl != "sharded":
+        raise ValueError("n_micro= schedules the sharded systolic "
+                         "pipeline; pass mesh=/mesh_shape= (or "
+                         "impl='sharded') or drop n_micro=")
     if mesh is not None or impl == "sharded":
         if prune:
             raise ValueError("mesh= streams every chunk; the LB cascade "
@@ -571,7 +625,8 @@ def pad_ragged_bucket(qs, idxs, blen: int):
 
 
 def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
-                 excl_hi, mesh, ref_axis, top_k, return_positions,
+                 excl_hi, mesh, ref_axis, n_micro=None, top_k,
+                 return_positions,
                  return_spans, excl_zone, excl_mode, block_q, block_m):
     """Bucketed dispatch for mixed-length query sets."""
     qs = [np.asarray(q) for q in queries]
@@ -594,7 +649,8 @@ def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
                    metric=metric, impl=impl, chunk=chunk,
                    excl_lo=jnp.asarray(lo[idxs]),
                    excl_hi=jnp.asarray(hi[idxs]),
-                   mesh=mesh, ref_axis=ref_axis, top_k=top_k,
+                   mesh=mesh, ref_axis=ref_axis, n_micro=n_micro,
+                   top_k=top_k,
                    return_positions=return_positions,
                    return_spans=return_spans, excl_zone=excl_zone,
                    excl_mode=excl_mode, block_q=block_q, block_m=block_m)

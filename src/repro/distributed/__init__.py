@@ -1,12 +1,25 @@
-from .sharding import Axes, tree_shardings
+from .sharding import (Axes, get_mesh, init_multi_host, pipeline_axes,
+                       tree_shardings)
 
-__all__ = ["Axes", "tree_shardings", "sdtw_sharded"]
+__all__ = ["Axes", "get_mesh", "init_multi_host", "pipeline_axes",
+           "tree_shardings", "sdtw_sharded", "sdtw_sharded_feed",
+           "build_pipeline", "make_schedule", "PipelineSchedule",
+           "clear_pipeline_cache"]
+
+_SDTW_NAMES = ("sdtw_sharded", "sdtw_sharded_feed", "build_pipeline",
+               "make_schedule", "PipelineSchedule", "clear_pipeline_cache")
 
 
 def __getattr__(name):
-    # Lazy: sdtw_sharded pulls in repro.core; keep the base import light and
-    # cycle-free (repro.core.engine lazily imports this module too).
-    if name == "sdtw_sharded":
-        from .sdtw_sharded import sdtw_sharded
-        return sdtw_sharded
+    # Lazy: the sharded driver pulls in repro.core; keep the base import
+    # light and cycle-free (repro.core.engine lazily imports this module
+    # too). Pin resolved names into globals() so the function named like
+    # its defining submodule (sdtw_sharded) stays the function on repeat
+    # access.
+    if name in _SDTW_NAMES:
+        import importlib
+        mod = importlib.import_module(".sdtw_sharded", __name__)
+        val = getattr(mod, name)
+        globals()[name] = val
+        return val
     raise AttributeError(name)

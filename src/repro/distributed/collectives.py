@@ -73,3 +73,34 @@ def compressed_psum(g, axis_name):
 
 def init_feedback(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def neighbor_perm(n: int):
+    """ppermute permutation for a left-to-right systolic hand-off.
+
+    Device i sends to i+1; device n-1's output is dropped (it has left the
+    pipeline) and device 0 receives zeros.
+    """
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def psum_harvest(outs, axis_name: str, n_stages: int, n_keep: int):
+    """Collect the last pipeline stage's scan outputs onto every device.
+
+    In a GPipe-style schedule the last stage emits microbatch t at tick
+    t + n_stages - 1, so the per-tick scan output pytree ``outs`` (leading
+    dim = ticks) holds the finished results in the window
+    [n_stages-1, n_stages-1+n_keep) — but only on the last stage; every
+    other device's slots hold in-flight intermediates. Slice that window,
+    zero it everywhere but the last stage, and psum so all devices end up
+    with the replicated result (leading dim ``n_keep``).
+    """
+    sid = lax.axis_index(axis_name)
+
+    def one(o):
+        kept = lax.dynamic_slice_in_dim(o, n_stages - 1, n_keep, 0)
+        kept = jnp.where(sid == n_stages - 1, kept,
+                         jnp.zeros_like(kept))
+        return lax.psum(kept, axis_name)
+
+    return jax.tree.map(one, outs)

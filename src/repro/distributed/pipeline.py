@@ -21,6 +21,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.distributed.collectives import neighbor_perm, psum_harvest
 
 
 def split_stages(stacked_params, n_stages: int):
@@ -46,7 +47,7 @@ def pipeline_apply(block_fn, stage_params, x_micro, mesh, axis: str = "stage"):
     n_stages = mesh.shape[axis]
     n_micro = x_micro.shape[0]
     ticks = n_micro + n_stages - 1
-    perm = [(i, i + 1) for i in range(n_stages - 1)]
+    perm = neighbor_perm(n_stages)
 
     def stage_body(params_local, xs):
         # params_local: [1, L/S, ...] (shard_map keeps the stage dim), xs
@@ -68,10 +69,9 @@ def pipeline_apply(block_fn, stage_params, x_micro, mesh, axis: str = "stage"):
             return nxt, out
 
         _, outs = lax.scan(tick, zero, jnp.arange(ticks))   # (ticks, mb,…)
-        # Last stage emits microbatch m at tick m + S - 1.
-        result = lax.dynamic_slice_in_dim(outs, n_stages - 1, n_micro, 0)
-        result = jnp.where(sid == n_stages - 1, result, 0)
-        return lax.psum(result, axis)          # replicate to all stages
+        # Last stage emits microbatch m at tick m + S - 1; harvest its
+        # window and replicate to all stages.
+        return psum_harvest(outs, axis, n_stages, n_micro)
 
     in_specs = jax.tree.map(lambda p: P(axis), stage_params)
     return shard_map(

@@ -95,3 +95,113 @@ def tree_shardings(axes: Axes, spec_tree):
     return jax.tree.map(
         lambda dims: NamedSharding(axes.mesh, axes.spec(*dims)),
         spec_tree, is_leaf=lambda v: isinstance(v, tuple))
+
+
+# ---------------------------------------------------------------------------
+# sDTW scaling meshes: (dp, mp) construction + axis resolution
+# ---------------------------------------------------------------------------
+
+def get_mesh(shape=None, axis_names: Optional[Sequence[str]] = None, *,
+             devices: Optional[Sequence] = None) -> Mesh:
+    """Build a mesh for the sharded sDTW engine, redco-style.
+
+    ``shape`` may be:
+      * None        — all devices on one systolic axis ``("mp",)``
+      * an int k    — ``(-1, k)``: k-way reference sharding, data-parallel
+                      over the rest
+      * a tuple     — explicit ``(mp,)`` or ``(dp, mp)``; at most one entry
+                      may be ``-1`` (inferred from the device count)
+
+    ``axis_names`` defaults to ``("mp",)`` / ``("dp", "mp")`` to match the
+    tuple length. ``devices`` restricts the mesh to a device subset
+    (defaults to ``jax.devices()``).
+    """
+    import numpy as np
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    ndev = len(devs)
+    if shape is None:
+        shape = (ndev,)
+    elif isinstance(shape, int):
+        shape = (-1, shape)
+    else:
+        shape = tuple(int(s) for s in shape)
+    if len(shape) not in (1, 2):
+        raise ValueError(f"mesh shape must be (mp,) or (dp, mp), got "
+                         f"{shape!r}")
+    if sum(1 for s in shape if s == -1) > 1:
+        raise ValueError(f"at most one -1 wildcard allowed in mesh shape, "
+                         f"got {shape!r}")
+    if any(s == 0 or s < -1 for s in shape):
+        raise ValueError(f"mesh shape entries must be positive or -1, got "
+                         f"{shape!r}")
+    if -1 in shape:
+        known = 1
+        for s in shape:
+            if s != -1:
+                known *= s
+        if known == 0 or ndev % known != 0:
+            raise ValueError(f"cannot infer -1 in mesh shape {shape!r}: "
+                             f"{ndev} devices not divisible by {known}")
+        shape = tuple(ndev // known if s == -1 else s for s in shape)
+    total = 1
+    for s in shape:
+        total *= s
+    if total != ndev:
+        raise ValueError(f"mesh shape {shape!r} needs {total} devices, "
+                         f"have {ndev}")
+    if axis_names is None:
+        axis_names = ("mp",) if len(shape) == 1 else ("dp", "mp")
+    axis_names = tuple(axis_names)
+    if len(axis_names) != len(shape):
+        raise ValueError(f"axis_names {axis_names!r} does not match mesh "
+                         f"shape {shape!r}")
+    return Mesh(np.array(devs).reshape(shape), axis_names)
+
+
+def pipeline_axes(mesh: Mesh, ref_axis: str = "ref",
+                  dp_axis: Optional[str] = None):
+    """Resolve (dp_axis, mp_axis) for the sharded sDTW pipeline.
+
+    The systolic (reference-sharded) axis is ``ref_axis`` if the mesh has
+    it, else ``"mp"``, else the sole axis of a 1-D mesh. The data-parallel
+    axis is ``dp_axis`` if given, else the single remaining axis (None for
+    a 1-D mesh). Ambiguous or missing axes raise.
+    """
+    names = tuple(mesh.axis_names)
+    if ref_axis in names:
+        mp = ref_axis
+    elif "mp" in names:
+        mp = "mp"
+    elif len(names) == 1:
+        mp = names[0]
+    else:
+        raise ValueError(f"cannot pick a systolic axis from mesh axes "
+                         f"{names!r}: pass ref_axis= naming one of them")
+    rest = tuple(n for n in names if n != mp)
+    if dp_axis is not None:
+        if dp_axis not in rest:
+            raise ValueError(f"dp_axis {dp_axis!r} not in mesh axes "
+                             f"{names!r} (systolic axis is {mp!r})")
+        return dp_axis, mp
+    if len(rest) == 0:
+        return None, mp
+    if len(rest) == 1:
+        return rest[0], mp
+    raise ValueError(f"mesh has several non-systolic axes {rest!r}; pass "
+                     f"dp_axis= naming the data-parallel one")
+
+
+def init_multi_host(coordinator_address: str, num_processes: int,
+                    process_id: int, **kwargs):
+    """Join a multi-host mesh via ``jax.distributed``.
+
+    Call once per process before any other jax API, then build the global
+    mesh with ``get_mesh`` — ``jax.devices()`` spans all hosts afterwards.
+    Returns (process_index, process_count).
+    """
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id, **kwargs)
+    return jax.process_index(), jax.process_count()

@@ -21,3 +21,11 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / examples), e.g. ((1, 2), ("data", "model"))."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def get_mesh(shape=None, axis_names=None, *, devices=None):
+    """(dp, mp) scaling mesh for the sharded sDTW engine — the redco-style
+    builder from ``repro.distributed.sharding`` (int / tuple / -1-wildcard
+    shapes), re-exported here next to the production LM meshes."""
+    from repro.distributed.sharding import get_mesh as _get_mesh
+    return _get_mesh(shape, axis_names, devices=devices)

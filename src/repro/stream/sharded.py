@@ -32,7 +32,9 @@ import numpy as np
 from repro.core.distances import accum_dtype
 from repro.core.sdtw import sdtw_carry_init
 from repro.core.topk import topk_init
-from repro.distributed.sdtw_sharded import default_mesh, sdtw_sharded_feed
+from repro.distributed.sdtw_sharded import (PipelineSchedule, default_mesh,
+                                            make_schedule, sdtw_sharded_feed)
+from repro.distributed.sharding import pipeline_axes
 
 from .session import DEFAULT_STREAM_CHUNK, StreamResult, _SNAP_VERSION
 
@@ -44,7 +46,7 @@ class ShardedStreamSession:
     alert callbacks (the candidate row never leaves the devices)."""
 
     def __init__(self, queries, *, qlens=None, metric: str = "abs_diff",
-                 mesh=None, axis: str = "ref",
+                 mesh=None, axis: str = "ref", dp_axis: Optional[str] = None,
                  chunk: Optional[int] = None, n_micro: Optional[int] = None,
                  top_k: Optional[int] = None, excl_zone=None,
                  excl_mode: str = "end", return_spans: bool = False,
@@ -62,12 +64,10 @@ class ShardedStreamSession:
                              "(or None for the per-query default)")
         self.mesh = default_mesh(axis) if mesh is None else mesh
         self.axis = axis
-        self.ndev = self.mesh.shape[axis]
         self.metric = metric
         self.chunk = int(DEFAULT_STREAM_CHUNK if chunk is None else chunk)
         if self.chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {self.chunk}")
-        self.macro = self.ndev * self.chunk
         self.top_k = top_k
         self.excl_mode = excl_mode
         self.return_spans = bool(return_spans)
@@ -89,20 +89,18 @@ class ShardedStreamSession:
         hi = (jnp.full((nq,), -1, jnp.int32) if excl_hi is None
               else jnp.broadcast_to(jnp.asarray(excl_hi, jnp.int32), (nq,)))
 
-        # Microbatch layout — identical to the offline sharded driver.
-        n_micro = self.ndev if n_micro is None else max(1, n_micro)
-        n_micro = min(n_micro, max(1, nq))
-        mb = -(-nq // n_micro)
-        pad_q = n_micro * mb - nq
-        self.n_micro, self.mb = n_micro, mb
-        self._q_micro = jnp.pad(queries, ((0, pad_q), (0, 0))).reshape(
-            n_micro, mb, n)
-        self._ql_micro = jnp.pad(qlens, (0, pad_q),
-                                 constant_values=1).reshape(n_micro, mb)
-        self._lo_micro = jnp.pad(lo, (0, pad_q),
-                                 constant_values=-1).reshape(n_micro, mb)
-        self._hi_micro = jnp.pad(hi, (0, pad_q),
-                                 constant_values=-1).reshape(n_micro, mb)
+        # Microbatch layout — the same schedule the offline driver uses.
+        self._sched = make_schedule(self.mesh, nq, ref_axis=axis,
+                                    dp_axis=dp_axis, n_micro=n_micro)
+        self.dp_axis = self._sched.dp_axis
+        self.n_dp = self._sched.n_dp
+        self.ndev = self._sched.n_mp           # systolic pipeline depth
+        self.macro = self.ndev * self.chunk
+        self.n_micro, self.mb = self._sched.n_micro, self._sched.mb
+        self._q_micro = self._sched.pack(queries)
+        self._ql_micro = self._sched.pack(qlens, fill=1)
+        self._lo_micro = self._sched.pack(lo, fill=-1)
+        self._hi_micro = self._sched.pack(hi, fill=-1)
 
         self._derive_modes()
         # zone pinning mirrors sdtw_sharded: None derives per query in the
@@ -138,7 +136,7 @@ class ShardedStreamSession:
                                 self._track)
         if self._wants_heap:
             fresh = fresh + topk_init(self.mb, self._k, acc)
-        return tuple(jnp.broadcast_to(x, (self.n_micro,) + x.shape)
+        return tuple(jnp.broadcast_to(x, (self._sched.slots,) + x.shape)
                      for x in fresh)
 
     @property
@@ -193,7 +191,8 @@ class ShardedStreamSession:
             jnp.asarray(padded), self._q_micro, self._ql_micro,
             self._lo_micro, self._hi_micro, carry,
             self._offset, self._offset + clen, mesh=self.mesh,
-            axis=self.axis, chunk=self.chunk, metric=self.metric,
+            axis=self.axis, dp_axis=self.dp_axis,
+            chunk=self.chunk, metric=self.metric,
             top_k=self._k if self._wants_heap else None,
             excl_zone=self._zone, excl_span=self.excl_mode == "span",
             track_start=self._track)
@@ -205,7 +204,7 @@ class ShardedStreamSession:
         if carry is not None and self._buf.shape[0]:
             carry = self._advance(carry, self._buf, int(self._buf.shape[0]))
         kk = self._k
-        flat = self.n_micro * self.mb
+        flat = self._sched.slots * self.mb
         if carry is None:
             d = np.full((flat, kk), np.inf)
             p = np.full((flat, kk), -1, np.int32)
@@ -241,6 +240,7 @@ class ShardedStreamSession:
         meta = dict(
             version=_SNAP_VERSION, kind="sharded", metric=self.metric,
             axis=self.axis, ndev=self.ndev, chunk=self.chunk,
+            dp_axis=self.dp_axis, n_dp=self.n_dp,
             n_micro=self.n_micro, mb=self.mb, nq=self._nq, n=self._n,
             single=self._single, top_k=self.top_k,
             excl_mode=self.excl_mode, return_spans=self.return_spans,
@@ -272,10 +272,16 @@ class ShardedStreamSession:
         self = cls.__new__(cls)
         self.mesh = default_mesh(meta["axis"]) if mesh is None else mesh
         self.axis = meta["axis"]
-        self.ndev = self.mesh.shape[self.axis]
-        if self.ndev != meta["ndev"]:
-            raise ValueError(f"snapshot was taken on {meta['ndev']} "
-                             f"devices, mesh has {self.ndev}")
+        dpax, mpax = pipeline_axes(self.mesh, ref_axis=self.axis,
+                                   dp_axis=meta.get("dp_axis"))
+        n_dp = self.mesh.shape[dpax] if dpax is not None else 1
+        n_mp = self.mesh.shape[mpax]
+        if n_mp != meta["ndev"] or n_dp != meta.get("n_dp", 1):
+            raise ValueError(
+                f"snapshot was taken on a ({meta.get('n_dp', 1)}, "
+                f"{meta['ndev']}) (dp, mp) layout, mesh resolves to "
+                f"({n_dp}, {n_mp})")
+        self.dp_axis, self.n_dp, self.ndev = dpax, n_dp, n_mp
         self.metric = meta["metric"]
         self.chunk = meta["chunk"]
         self.macro = self.ndev * self.chunk
@@ -285,6 +291,10 @@ class ShardedStreamSession:
         self.return_positions = meta["return_positions"]
         self.n_micro, self.mb = meta["n_micro"], meta["mb"]
         self._nq, self._n = meta["nq"], meta["n"]
+        # Rebuild the exact layout the snapshot was written under (not via
+        # make_schedule — its defaults may have changed across versions).
+        self._sched = PipelineSchedule(dpax, mpax, n_dp, n_mp,
+                                       self.n_micro, self.mb, self._nq)
         self._single = meta["single"]
         self._derive_modes()
         self._zone = meta["zone"]

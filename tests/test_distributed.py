@@ -7,15 +7,30 @@ import sys
 import pytest
 
 
-@pytest.mark.slow
-def test_distributed_semantics_subprocess():
+def _run_check(extra_args=()):
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8")
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     script = os.path.join(os.path.dirname(__file__), "_distributed_check.py")
-    res = subprocess.run([sys.executable, script], env=env,
-                         capture_output=True, text=True, timeout=1200)
+    return subprocess.run([sys.executable, script, *extra_args], env=env,
+                          capture_output=True, text=True, timeout=1200)
+
+
+@pytest.mark.slow
+def test_distributed_semantics_subprocess():
+    res = _run_check()
     assert res.returncode == 0, res.stdout + "\n" + res.stderr
     assert "DISTRIBUTED_ALL_OK" in res.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape", ["1,8", "2,4", "4,2"])
+def test_distributed_sdtw_mesh_shapes(shape):
+    """Every (dp, mp) factorization of the 8 devices runs the full sDTW
+    check body (batch / top-K both modes / spans / stream, all bitwise
+    against the single-device engine)."""
+    res = _run_check(["--sdtw-mesh", shape])
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "DISTRIBUTED_SDTW_OK" in res.stdout

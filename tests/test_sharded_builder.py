@@ -1,0 +1,202 @@
+"""The shared systolic pipeline builder, its schedule helper, the (dp, mp)
+mesh constructors, and the bounded pipeline cache — everything that runs on
+the single local device (multi-device semantics live in
+tests/_distributed_check.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.sdtw import sdtw_chunked
+import repro.distributed.sdtw_sharded as shmod
+from repro.distributed import get_mesh, pipeline_axes
+from repro.distributed.sdtw_sharded import (clear_pipeline_cache,
+                                            default_mesh, make_schedule,
+                                            sdtw_sharded, _cache_size)
+from repro.stream import ShardedStreamSession, StreamSession
+
+RNG = np.random.default_rng(7)
+QS = jnp.asarray(RNG.integers(-40, 40, (5, 6)).astype(np.int32))
+R = jnp.asarray(RNG.integers(-40, 40, (97,)).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# get_mesh / pipeline_axes
+# ---------------------------------------------------------------------------
+
+def test_get_mesh_shapes():
+    ndev = len(jax.devices())
+    m = get_mesh()
+    assert m.axis_names == ("mp",) and m.shape["mp"] == ndev
+    m = get_mesh((1, -1))
+    assert m.axis_names == ("dp", "mp")
+    assert m.shape["dp"] == 1 and m.shape["mp"] == ndev
+    m = get_mesh(ndev)                       # int → (-1, k), redco-style
+    assert m.shape["mp"] == ndev and m.shape["dp"] == 1
+    m = get_mesh((-1,), ("ref",))
+    assert m.axis_names == ("ref",)
+
+
+def test_get_mesh_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="or .dp, mp."):
+        get_mesh((1, 1, 1))
+    with pytest.raises(ValueError, match="at most one -1"):
+        get_mesh((-1, -1))
+    with pytest.raises(ValueError, match="positive or -1"):
+        get_mesh((0, 1))
+    with pytest.raises(ValueError, match="needs"):
+        get_mesh((3, 7))
+    with pytest.raises(ValueError, match="not divisible"):
+        get_mesh((-1, 3 * len(jax.devices()) + 1))
+    with pytest.raises(ValueError, match="axis_names"):
+        get_mesh((1, -1), ("only_one",))
+
+
+def test_pipeline_axes_resolution():
+    assert pipeline_axes(default_mesh("ref")) == (None, "ref")
+    assert pipeline_axes(get_mesh((1, -1))) == ("dp", "mp")
+    assert pipeline_axes(get_mesh()) == (None, "mp")
+    # explicit ref_axis wins over the "mp" convention
+    m = get_mesh((1, -1), ("rows", "ref"))
+    assert pipeline_axes(m, ref_axis="ref") == ("rows", "ref")
+    with pytest.raises(ValueError, match="dp_axis"):
+        pipeline_axes(get_mesh((1, -1)), dp_axis="nope")
+    with pytest.raises(ValueError, match="systolic axis"):
+        pipeline_axes(get_mesh((1, -1), ("a", "b")))
+
+
+# ---------------------------------------------------------------------------
+# make_schedule
+# ---------------------------------------------------------------------------
+
+def test_make_schedule_defaults_and_packing():
+    mesh = get_mesh((1, -1))
+    sched = make_schedule(mesh, nq=5)
+    assert sched.slots == sched.n_dp * sched.n_micro
+    assert sched.slots * sched.mb >= 5
+    packed = sched.pack(QS)
+    assert packed.shape == (sched.slots, sched.mb, QS.shape[1])
+    out = sched.unpack(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(QS))
+
+
+def test_make_schedule_rejects_excess_n_micro():
+    mesh = get_mesh()
+    with pytest.raises(ValueError, match="exceeds the padded batch"):
+        make_schedule(mesh, nq=3, n_micro=4 * len(jax.devices()) + 4)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_schedule(mesh, nq=3, n_micro=0)
+    # default clamps instead of raising
+    sched = make_schedule(mesh, nq=1)
+    assert sched.n_micro == 1
+
+
+# ---------------------------------------------------------------------------
+# sharded == chunked bitwise on local meshes (incl. a degenerate 2D mesh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_fn", [
+    lambda: default_mesh("ref"), lambda: get_mesh((1, -1))],
+    ids=["1d_ref", "2d_dp_mp"])
+def test_sharded_matches_chunked_bitwise(mesh_fn):
+    mesh = mesh_fn()
+    want = np.asarray(sdtw_chunked(QS, R, chunk=8))
+    got = np.asarray(sdtw_sharded(QS, R, chunk=8, mesh=mesh))
+    np.testing.assert_array_equal(got, want)
+    for mode in ("end", "span"):
+        tk_c = sdtw_chunked(QS, R, chunk=8, top_k=3, excl_zone=4,
+                            excl_mode=mode, return_spans=True)
+        tk_s = sdtw_sharded(QS, R, chunk=8, top_k=3, excl_zone=4,
+                            excl_mode=mode, return_spans=True, mesh=mesh)
+        for a, b in zip(tk_s, tk_c):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sp_c = sdtw_chunked(QS, R, chunk=8, return_spans=True)
+    sp_s = sdtw_sharded(QS, R, chunk=8, return_spans=True, mesh=mesh)
+    for a, b in zip(sp_s, sp_c):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_n_micro_invariance():
+    mesh = default_mesh("ref")
+    want = np.asarray(sdtw_sharded(QS, R, chunk=8, mesh=mesh))
+    for nm in (1, 2, 5):                     # 5 == nq: ragged tail gone
+        got = np.asarray(sdtw_sharded(QS, R, chunk=8, mesh=mesh,
+                                      n_micro=nm))
+        np.testing.assert_array_equal(got, want, err_msg=f"n_micro={nm}")
+
+
+# ---------------------------------------------------------------------------
+# engine front-door knobs + validation
+# ---------------------------------------------------------------------------
+
+def test_engine_mesh_shape_knob():
+    want = np.asarray(engine.sdtw(QS, R, chunk=8))
+    got = np.asarray(engine.sdtw(QS, R, chunk=8, mesh_shape=(1, -1)))
+    np.testing.assert_array_equal(got, want)
+    with pytest.raises(ValueError, match="not both"):
+        engine.sdtw(QS, R, mesh=get_mesh(), mesh_shape=(1, -1))
+
+
+def test_engine_sharded_validation():
+    with pytest.raises(ValueError, match="n_micro= schedules"):
+        engine.sdtw(QS, R, n_micro=2)
+    with pytest.raises(ValueError, match="scalar excl_zone"):
+        engine.sdtw(QS, R, mesh_shape=(1, -1), top_k=2,
+                    excl_zone=np.arange(5))
+    with pytest.raises(ValueError, match="already returns"):
+        engine.sdtw(QS, R, mesh_shape=(1, -1), top_k=2,
+                    return_positions=True)
+    with pytest.raises(ValueError, match="exceeds the padded batch"):
+        engine.sdtw(QS, R, mesh_shape=(1, -1),
+                    n_micro=5 * len(jax.devices()) + 5)
+    with pytest.raises(ValueError, match="n_micro= schedules"):
+        engine.stream(QS, n_micro=2)
+
+
+# ---------------------------------------------------------------------------
+# bounded pipeline cache
+# ---------------------------------------------------------------------------
+
+def test_pipeline_cache_bounded_and_fingerprint_keyed(monkeypatch):
+    clear_pipeline_cache()
+    assert _cache_size() == 0
+    sdtw_sharded(QS, R, chunk=8)
+    assert _cache_size() == 1
+    sdtw_sharded(QS, R, chunk=8)             # same config: no new entry
+    assert _cache_size() == 1
+    # distinct Mesh objects over the same devices share one entry
+    sdtw_sharded(QS, R, chunk=8, mesh=default_mesh("ref"))
+    assert _cache_size() == 1
+    sdtw_sharded(QS, R, chunk=8, top_k=2)    # new config: new entry
+    assert _cache_size() == 2
+    # eviction keeps the cache bounded
+    monkeypatch.setattr(shmod, "PIPELINE_CACHE_MAX", 2)
+    sdtw_sharded(QS, R, chunk=8, top_k=3)
+    assert _cache_size() == 2
+    clear_pipeline_cache()
+    assert _cache_size() == 0
+
+
+# ---------------------------------------------------------------------------
+# ShardedStreamSession rides the same schedule (degenerate 2D mesh)
+# ---------------------------------------------------------------------------
+
+def test_sharded_session_on_2d_mesh_matches_single_process():
+    mesh = get_mesh((1, -1))
+    sh = ShardedStreamSession(QS, mesh=mesh, chunk=8, top_k=2,
+                              return_spans=True)
+    sp = StreamSession(QS, chunk=8, top_k=2, return_spans=True)
+    r_np = np.asarray(R)
+    for off in range(0, r_np.shape[0], 17):
+        sh.feed(r_np[off:off + 17])
+        sp.feed(r_np[off:off + 17])
+    a, b = sh.results(), sp.results()
+    for x, y in ((a.distances, b.distances), (a.starts, b.starts),
+                 (a.positions, b.positions)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # snapshot → restore keeps the (dp, mp) layout
+    sh2 = ShardedStreamSession.restore(sh.snapshot(), mesh=get_mesh((1, -1)))
+    np.testing.assert_array_equal(np.asarray(sh2.results().distances),
+                                  np.asarray(a.distances))
