@@ -76,7 +76,8 @@ def main(argv=None):
 
     from . import (common, endurance, fig09_latency_sweep, fig10_energy_sweep,
                    fig11_12_dataset_sweep, fig13_scaling, roofline_table,
-                   sdtw_kernel_bench, search_bench, table6_speedups)
+                   sdtw_kernel_bench, search_bench, serve_bench,
+                   table6_speedups)
     mods = [
         ("fig09_latency_sweep", fig09_latency_sweep.main),
         ("fig10_energy_sweep", fig10_energy_sweep.main),
@@ -87,6 +88,7 @@ def main(argv=None):
         ("sdtw_kernel_bench",
          lambda: sdtw_kernel_bench.main(smoke=args.smoke)),
         ("search_bench", lambda: search_bench.main(smoke=args.smoke)),
+        ("serve_bench", lambda: serve_bench.main(smoke=args.smoke)),
         ("roofline_table", roofline_table.main),
     ]
     if args.only:

@@ -1,0 +1,85 @@
+"""Closed-loop offered-load sweep over the serving router.
+
+For each client count, N closed-loop threads hammer one ``Router``
+(submit → wait → repeat); rows report the client-observed latency split
+and goodput, plus the router correctness gate: every served answer is
+compared bitwise against the client's own offline ``engine.sdtw`` call
+(int32 inputs, so equality is exact) and the row carries
+``served_vs_offline=equal`` only if every comparison passed — CI pins
+that token.
+
+Rows:
+    serve_bench/closed_loop_c{N}   us_per_call = p50 client latency
+        derived: p99_us, goodput_rps (completed requests / wall s),
+                 occupancy (requests per engine dispatch),
+                 served_vs_offline
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from .common import emit, print_rows
+
+
+def _closed_loop(*, clients, requests, nq, qlen, reflen, window_ms, seed=0):
+    import repro.core.engine as engine
+    from repro.serve import Router, RouterConfig
+
+    rng = np.random.default_rng(seed)
+    reference = rng.integers(-40, 40, reflen).astype(np.int32)
+    queries = [rng.integers(-40, 40, (nq, qlen)).astype(np.int32)
+               for _ in range(clients)]
+    offline = [np.asarray(engine.sdtw(q, reference)) for q in queries]
+
+    flags = [True] * clients
+    config = RouterConfig(window_ms=window_ms, max_queue=4 * clients)
+    with Router(config) as router:
+        def client(ci):
+            for _ in range(requests):
+                got = np.asarray(router.sdtw(queries[ci], reference))
+                if not np.array_equal(got, offline[ci]):
+                    flags[ci] = False
+
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = router.stats()
+    goodput = stats.completed / wall if wall > 0 else float("nan")
+    return stats, goodput, all(flags)
+
+
+def main(smoke: bool = False):
+    if smoke:
+        sweep, requests, nq, qlen, reflen = (1, 4), 3, 2, 32, 512
+    else:
+        sweep, requests, nq, qlen, reflen = (1, 4, 16), 8, 4, 128, 4096
+
+    rows = []
+    for clients in sweep:
+        # Warm the jit cache at the same fan-in so the measured window
+        # times serving, not the coalesced bucket shape's first compile.
+        _closed_loop(clients=clients, requests=1, nq=nq, qlen=qlen,
+                     reflen=reflen, window_ms=2.0)
+        stats, goodput, equal = _closed_loop(
+            clients=clients, requests=requests, nq=nq, qlen=qlen,
+            reflen=reflen, window_ms=2.0)
+        rows.append(emit(
+            f"serve_bench/closed_loop_c{clients}",
+            stats.p50_latency_us,
+            f"p99_us={stats.p99_latency_us:.0f};"
+            f"goodput_rps={goodput:.1f};"
+            f"occupancy={stats.mean_batch_requests:.2f};"
+            f"served_vs_offline={'equal' if equal else 'DIFF'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(main())

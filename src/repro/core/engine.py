@@ -84,11 +84,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .distances import accum_dtype, big
+from .request import SdtwRequest, StreamRequest, resolve_mesh
 from .sdtw import sdtw_batch, sdtw_chunked
 from .traceback import AlignResult, DEFAULT_TRACE_CHUNK, traceback_path
-
-IMPLS = ("auto", "rowscan", "wavefront", "pallas", "chunked", "sharded")
-EXCL_MODES = ("end", "span")
 
 CHUNK_THRESHOLD = 1 << 17   # auto-switch to streaming above this M
 DEFAULT_CHUNK = 8192        # tile size for chunked/sharded streaming
@@ -146,71 +144,9 @@ def _normalize_excl(val, nq: int):
     return arr
 
 
-def _check_forced_impl(impl: str, *, mesh, chunk, top_k):
-    """Explicit precedence for forced impls: reject contradictory args
-    instead of silently ignoring them."""
-    if impl in ("rowscan", "wavefront"):
-        if mesh is not None:
-            raise ValueError(
-                f"impl={impl!r} is an in-core path but mesh= requests the "
-                "sharded driver; drop mesh= or use impl='sharded'/'auto'")
-        if chunk is not None:
-            raise ValueError(
-                f"impl={impl!r} runs in-core and would ignore chunk=; drop "
-                "chunk= or use impl='chunked'/'pallas' for streaming")
-        if top_k is not None:
-            raise ValueError(
-                f"impl={impl!r} does not carry a top-K heap; top_k= runs on "
-                "the chunked/sharded streaming paths (impl='auto' routes it)")
-    elif impl == "pallas":
-        if mesh is not None:
-            raise ValueError(
-                "impl='pallas' is single-device; drop mesh= or use "
-                "impl='sharded'/'auto'")
-        if top_k is not None:
-            raise ValueError(
-                "impl='pallas' reports the single best match "
-                "(return_positions/return_spans); offline top_k= runs on "
-                "the chunked/sharded streaming paths — the kernel's "
-                "last-row capture serves top-K via repro.search "
-                "(engine_impl='pallas') and streaming sessions")
-    elif impl == "chunked" and mesh is not None:
-        raise ValueError(
-            "impl='chunked' is single-device; drop mesh= or use "
-            "impl='sharded'/'auto'")
-
-
-def _resolve_mesh(mesh, mesh_shape):
-    """``mesh_shape=`` builds the (dp, mp) mesh via the distributed layer."""
-    if mesh_shape is None:
-        return mesh
-    if mesh is not None:
-        raise ValueError("pass either mesh= (a prebuilt jax Mesh) or "
-                         "mesh_shape= (built for you), not both")
-    from repro.distributed.sharding import get_mesh
-    return get_mesh(mesh_shape)
-
-
-def _check_sharded_args(*, mesh, impl, n_micro, excl_zone, top_k,
-                        return_positions):
-    """Loud, stream()-style rejection of options the sharded path cannot
-    honour — instead of silently mishandling them deep in the driver."""
-    sharded = mesh is not None or impl == "sharded"
-    if n_micro is not None and not sharded:
-        raise ValueError("n_micro= schedules the sharded systolic "
-                         "pipeline; pass mesh=/mesh_shape= (or "
-                         "impl='sharded') or drop n_micro=")
-    if not sharded:
-        return
-    if excl_zone is not None and np.ndim(excl_zone) != 0:
-        raise ValueError("the sharded driver takes a scalar excl_zone (or "
-                         "None for the per-query default); per-query zone "
-                         "arrays run on the single-device chunked path "
-                         "(drop mesh=)")
-    if return_positions and top_k is not None:
-        raise ValueError("top_k= already returns (dists, positions) on "
-                         "the sharded driver; return_positions=True adds "
-                         "nothing there — drop it (or use return_spans=)")
+#: Kept as module aliases — the canonical definitions live with the
+#: shared validator in ``repro.core.request``.
+_resolve_mesh = resolve_mesh
 
 
 def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
@@ -255,8 +191,12 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  ``top_k`` this works on every impl.
       return_spans: return ``(dists, starts, ends)`` — the start-pointer
                  lane; works on every impl, stacks to (nq, k) with top_k.
-      excl_zone: top-K suppression radius; scalar, or default half of
-                 each query's true length (0 with ``excl_mode='span'``).
+      excl_zone: top-K suppression radius — semantics documented ONCE on
+                 ``repro.core.request`` (shared with ``search_topk``):
+                 ``None`` derives per query (half the true length, or 0
+                 with ``excl_mode='span'``); scalar applies to all;
+                 per-query (nq,) arrays run on the single-device chunked
+                 path only.
       excl_mode: 'end' suppresses matches whose *end* is within
                  ``excl_zone``; 'span' suppresses matches whose spans
                  overlap (widened by ``excl_zone``). Only meaningful with
@@ -268,28 +208,29 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
     1-D query; a (dists, positions) pair or (dists, starts, ends) triple
     in the positions/spans modes.
     """
-    if impl not in IMPLS:
-        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
-    if excl_mode not in EXCL_MODES:
-        raise ValueError(f"excl_mode must be one of {EXCL_MODES}, got "
-                         f"{excl_mode!r}")
-    if (excl_lo is None) != (excl_hi is None):
-        raise ValueError("excl_lo and excl_hi must be given together "
-                         "(a one-sided zone would silently ban nothing)")
-    if top_k is not None and (not isinstance(top_k, int) or top_k < 1):
-        raise ValueError(f"top_k must be a positive int, got {top_k!r}")
-    if excl_mode == "span" and top_k is None:
-        raise ValueError("excl_mode='span' only affects top-K suppression; "
-                         "pass top_k= (k=1 selection never suppresses)")
-    mesh = _resolve_mesh(mesh, mesh_shape)
-    _check_forced_impl(impl, mesh=mesh, chunk=chunk, top_k=top_k)
-    _check_sharded_args(mesh=mesh, impl=impl, n_micro=n_micro,
-                        excl_zone=excl_zone, top_k=top_k,
-                        return_positions=return_positions)
+    return SdtwRequest(
+        queries=queries, reference=reference, qlens=qlens, metric=metric,
+        impl=impl, chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
+        mesh=mesh, mesh_shape=mesh_shape, ref_axis=ref_axis,
+        n_micro=n_micro, top_k=top_k, return_positions=return_positions,
+        return_spans=return_spans, excl_zone=excl_zone,
+        excl_mode=excl_mode, block_q=block_q, block_m=block_m,
+        op="sdtw").run()
+
+
+def _execute_sdtw(req: SdtwRequest):
+    """The engine dispatcher behind ``SdtwRequest.run()`` — the request is
+    already validated/normalized (mesh resolved); this owns shape
+    resolution, ``impl='auto'`` dispatch, and the execution paths."""
+    (queries, reference, qlens, metric, impl, chunk, excl_lo, excl_hi,
+     mesh, ref_axis, n_micro, top_k, return_positions, return_spans,
+     excl_zone, excl_mode, block_q, block_m) = (
+        req.queries, req.reference, req.qlens, req.metric, req.impl,
+        req.chunk, req.excl_lo, req.excl_hi, req.mesh, req.ref_axis,
+        req.n_micro, req.top_k, req.return_positions, req.return_spans,
+        req.excl_zone, req.excl_mode, req.block_q, req.block_m)
 
     if _is_ragged(queries):
-        if qlens is not None:
-            raise ValueError("qlens is implied by ragged (list) queries")
         return _sdtw_ragged(queries, reference, metric=metric, impl=impl,
                             chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
                             mesh=mesh, ref_axis=ref_axis, n_micro=n_micro,
@@ -391,49 +332,15 @@ def stream(queries, *, qlens=None, metric: str = "abs_diff",
     internal DP tile size (compile granularity) — feed granularity is
     independent of it.
     """
-    from repro.stream import ShardedStreamSession, StreamSession
-    if impl not in ("auto", "rowscan", "pallas", "sharded"):
-        raise ValueError(
-            f"impl must be 'auto', 'rowscan', 'pallas' or 'sharded' for "
-            f"streaming, got {impl!r}")
-    mesh = _resolve_mesh(mesh, mesh_shape)
-    if n_micro is not None and mesh is None and impl != "sharded":
-        raise ValueError("n_micro= schedules the sharded systolic "
-                         "pipeline; pass mesh=/mesh_shape= (or "
-                         "impl='sharded') or drop n_micro=")
-    if mesh is not None or impl == "sharded":
-        if prune:
-            raise ValueError("mesh= streams every chunk; the LB cascade "
-                             "is single-process (drop prune=True)")
-        if alert_threshold is not None or on_alert is not None:
-            raise ValueError("alerts are single-process; drop mesh=")
-        if cache is not None or ref_key is not None:
-            raise ValueError("the envelope cache is built by the "
-                             "single-process pruning path; cache=/ref_key= "
-                             "have no effect on a sharded session (drop "
-                             "them or drop mesh=)")
-        if span_cap is not None:
-            raise ValueError("span_cap= only bounds the pruned path; a "
-                             "sharded session streams every chunk exactly")
-        return ShardedStreamSession(
-            queries, qlens=qlens, metric=metric, mesh=mesh, axis=ref_axis,
-            chunk=chunk, n_micro=n_micro, top_k=top_k, excl_zone=excl_zone,
-            excl_mode=excl_mode, return_spans=return_spans,
-            return_positions=return_positions, excl_lo=excl_lo,
-            excl_hi=excl_hi)
-    if impl == "auto":
-        # Only per-query exclusion zones force the rowscan tile loop —
-        # top-K heaps, threshold alerts and online pruning all score on
-        # the kernel's in-kernel last-row capture now.
-        impl = ("pallas" if jax.default_backend() == "tpu"
-                and excl_lo is None else "rowscan")
-    return StreamSession(
-        queries, qlens=qlens, metric=metric, chunk=chunk, impl=impl,
-        top_k=top_k, excl_zone=excl_zone, excl_mode=excl_mode,
-        return_spans=return_spans, return_positions=return_positions,
-        excl_lo=excl_lo, excl_hi=excl_hi, prune=prune, span_cap=span_cap,
+    return StreamRequest(
+        queries=queries, qlens=qlens, metric=metric, impl=impl,
+        chunk=chunk, mesh=mesh, mesh_shape=mesh_shape, ref_axis=ref_axis,
+        n_micro=n_micro, top_k=top_k, excl_zone=excl_zone,
+        excl_mode=excl_mode, return_spans=return_spans,
+        return_positions=return_positions, excl_lo=excl_lo,
+        excl_hi=excl_hi, prune=prune, span_cap=span_cap,
         alert_threshold=alert_threshold, on_alert=on_alert, cache=cache,
-        ref_key=ref_key, block_q=block_q, block_m=block_m)
+        ref_key=ref_key, block_q=block_q, block_m=block_m).open()
 
 
 def align(queries, reference, qlens=None, *, metric: str = "abs_diff",

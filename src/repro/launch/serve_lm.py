@@ -1,0 +1,71 @@
+"""LM serving driver: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch mamba2-780m \
+        --preset reduced --batch 4 --prompt-len 32 --gen 16
+
+(Moved from ``repro.launch.serve``; the unqualified name now belongs to
+the TSA serving tier — ``python -m repro.serve``.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import RunConfig, init_lm, prefill
+from repro.train import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--preset", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.preset == "reduced":
+        cfg = cfg.reduced()
+    run = RunConfig(remat="none")
+    key = jax.random.PRNGKey(args.seed)
+    params = init_lm(cfg, key)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    max_len = args.prompt_len + args.gen + 1
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(cfg, params, {"tokens": prompts}, max_len,
+                            run=run)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    serve = jax.jit(make_serve_step(cfg, run, sample=args.sample))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        rng = jax.random.fold_in(key, i) if args.sample else None
+        tok, _, cache = serve(params, tok, cache, rng)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    gen = jnp.stack(outs, 1)
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch,
+        "prefill_ms": round(t_prefill * 1e3, 1),
+        "decode_ms_per_token": round(t_decode * 1e3 / max(args.gen - 1, 1), 2),
+        "tokens_per_s": round(args.batch * (args.gen - 1) / t_decode, 1),
+        "sample_output": [int(x) for x in gen[0][:8]],
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.distances import accum_dtype
+from repro.core.request import SdtwRequest
 from repro.core.sdtw import (default_excl_zone, sdtw_carry_init,
                              sdtw_chunk_batch_topk, sdtw_segment,
                              topk_fold_lastrow)
@@ -264,23 +265,32 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
     the DP start-pointer lane: the row-0 reference column where each
     match's alignment begins, so ``(starts[i, j], positions[i, j])`` is
     the j-th best matched span of query i.
+
+    ``excl_zone`` semantics (incl. the per-query default) are documented
+    once on ``repro.core.request`` — this front door is a thin shim over
+    ``SdtwRequest(op='search_topk')``.
     """
-    if not isinstance(k, int) or k < 1:
-        raise ValueError(f"k must be a positive int, got {k!r}")
-    if excl_mode not in ("end", "span"):
-        raise ValueError(f"excl_mode must be 'end' or 'span', got "
-                         f"{excl_mode!r}")
-    if mesh is not None and prune:
-        raise ValueError("mesh= runs the sharded engine over every chunk; "
-                         "pass prune=False explicitly (the LB cascade is "
-                         "single-process)")
-    if engine_impl not in ("auto", "rowscan", "pallas"):
-        raise ValueError(f"engine_impl must be 'auto', 'rowscan' or "
-                         f"'pallas', got {engine_impl!r}")
+    return SdtwRequest(
+        op="search_topk", queries=queries, reference=reference, top_k=k,
+        qlens=qlens, metric=metric, chunk=chunk, prune=prune,
+        span_cap=span_cap, excl_zone=excl_zone, excl_mode=excl_mode,
+        normalize=normalize, excl_lo=excl_lo, excl_hi=excl_hi, mesh=mesh,
+        ref_axis=ref_axis, cache=cache, ref_key=ref_key,
+        engine_impl=engine_impl).run()
+
+
+def _execute_search(req: SdtwRequest) -> SearchResult:
+    """The search dispatcher behind ``SdtwRequest.run()`` — the request
+    is already validated/normalized."""
+    (queries, reference, k, qlens, metric, chunk, prune, span_cap,
+     excl_zone, excl_mode, normalize, excl_lo, excl_hi, mesh, ref_axis,
+     cache, ref_key, engine_impl) = (
+        req.queries, req.reference, req.top_k, req.qlens, req.metric,
+        req.chunk, req.prune, req.span_cap, req.excl_zone, req.excl_mode,
+        req.normalize, req.excl_lo, req.excl_hi, req.mesh, req.ref_axis,
+        req.cache, req.ref_key, req.engine_impl)
+
     has_excl = excl_lo is not None or excl_hi is not None
-    if engine_impl == "pallas" and has_excl:
-        raise ValueError("the pallas kernel does not support per-query "
-                         "exclusion zones; use engine_impl='rowscan'")
     if engine_impl == "auto":
         engine_impl = ("pallas" if jax.default_backend() == "tpu"
                        and not has_excl else "rowscan")
@@ -292,8 +302,6 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
 
     ragged = isinstance(queries, (list, tuple))
     if ragged:
-        if qlens is not None:
-            raise ValueError("qlens is implied by ragged (list) queries")
         qs = [np.asarray(q) for q in queries]
         buckets = engine.bucketize([len(q) for q in qs])
         nq = len(qs)

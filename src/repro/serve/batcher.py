@@ -1,0 +1,156 @@
+"""Microbatch coalescing: many client requests → few engine dispatches.
+
+A drained window of admitted requests is grouped by
+``SdtwRequest.coalesce_key()`` (everything that selects a compiled
+executable or changes per-query semantics) plus the reference identity
+and the query dtype. Each group becomes ONE merged ragged engine call:
+every client's queries are trimmed to true length and concatenated into
+one ragged list, so the engine's existing power-of-two bucketing yields
+one DP dispatch per bucket per window — serving reuses the exact
+amortization machinery of the offline path instead of duplicating it.
+
+Correctness contract (pinned by ``tests/test_serve.py``):
+
+  * ``op='sdtw'`` — the DP is per-query independent and the padded
+    columns are masked by ``qlens``, so the merged call is **bitwise**
+    identical (int32) to each client calling ``engine.sdtw`` alone.
+  * ``op='search_topk'`` — the LB-cascade thresholds are batch-shared
+    (a chunk is pruned only when *no* query in the batch can improve),
+    so the merged call is bitwise identical to one offline *batched*
+    ``search_topk`` over the same queries; top-1 distances additionally
+    match the per-client calls exactly (the cascade never prunes a true
+    winner).
+
+A group of one request dispatches the request unchanged — zero
+repacking, trivially identical to the offline call.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.request import SdtwRequest
+
+from .telemetry import RequestTrace
+
+
+@dataclasses.dataclass
+class Pending:
+    """One admitted request waiting for dispatch."""
+    request: SdtwRequest
+    future: object               # concurrent.futures.Future
+    trace: RequestTrace
+    single: bool = False         # client passed one 1-D query
+    entries: list = None         # true-length 1-D query arrays
+
+
+def ref_fingerprint(req: SdtwRequest):
+    """Reference identity for grouping: the user's stable ``ref_key``
+    when given (callers assert equal keys mean equal content — same
+    contract as the envelope cache), else object identity; shape/dtype
+    folded in so a stale key can never merge mismatched references."""
+    ref = np.asarray(req.reference)
+    base = req.ref_key if req.ref_key is not None else ("id",
+                                                        id(req.reference))
+    return (base, ref.shape, str(ref.dtype))
+
+
+def query_entries(req: SdtwRequest):
+    """Flatten a request's queries into true-length 1-D arrays.
+
+    Returns ``(entries, single)`` — padded 2-D input is trimmed per
+    ``qlens`` (the engine masks padded columns by qlens, so repacking
+    is bitwise-invariant; the repo's ragged differential tests pin
+    this)."""
+    q = req.queries
+    if isinstance(q, (list, tuple)):
+        return [np.asarray(x) for x in q], False
+    arr = np.asarray(q)
+    if arr.ndim == 1:
+        return [arr], True
+    if req.qlens is not None:
+        lens = np.asarray(req.qlens).astype(int)
+        return [arr[i, :lens[i]] for i in range(arr.shape[0])], False
+    return [arr[i] for i in range(arr.shape[0])], False
+
+
+def group_key(req: SdtwRequest):
+    """Full coalescing key: semantic key × reference × query dtype (the
+    accumulator dtype depends on both operand dtypes, so mixing query
+    dtypes in one batch would change every client's result type).
+    Per-query exclusion *arrays* are sized to one request's batch and
+    cannot be concatenated semantically — such requests never coalesce
+    at all (unique key), even when two clients share the array object."""
+    entries, _ = query_entries(req)
+    qdtype = str(np.result_type(*entries)) if entries else "none"
+    per_query = tuple(np.ndim(v) != 0 for v in
+                      (req.excl_zone, req.excl_lo, req.excl_hi)
+                      if v is not None)
+    solo = (id(req),) if any(per_query) else ()
+    return req.coalesce_key(ref_id=ref_fingerprint(req)) + (qdtype,) + solo
+
+
+def group_window(pending: list) -> list:
+    """Partition a drained window into coalescable groups (stable
+    order)."""
+    groups: dict = {}
+    for p in pending:
+        p.entries, p.single = query_entries(p.request)
+        groups.setdefault(group_key(p.request), []).append(p)
+    return list(groups.values())
+
+
+def _slice_result(res, i0: int, i1: int, single: bool):
+    """Cut one client's rows out of a merged result (array, tuple of
+    arrays, or SearchResult — every payload's leading axis is nq)."""
+    if isinstance(res, tuple):
+        return tuple(_slice_result(r, i0, i1, single) for r in res)
+    if hasattr(res, "distances"):        # SearchResult: slice the payload,
+        return dataclasses.replace(      # share the batch-level telemetry
+            res,
+            distances=_slice_result(res.distances, i0, i1, single),
+            positions=_slice_result(res.positions, i0, i1, single),
+            starts=_slice_result(res.starts, i0, i1, single))
+    out = res[i0:i1]
+    return out[0] if single else out
+
+
+def execute_group(group: list, telemetry=None):
+    """Run one coalesced group and deliver every client future.
+
+    Never raises: an execution error is propagated into every member
+    future (the admission contract — admitted requests are always
+    answered). Each trace is completed and recorded *before* its future
+    resolves, so a client that has its result is guaranteed to already
+    be counted in the stats snapshot."""
+    n_queries = sum(len(p.entries) for p in group)
+    for p in group:
+        p.trace.mark_dispatch(batch_requests=len(group),
+                              batch_queries=n_queries)
+
+    def deliver(p, result=None, exc=None):
+        p.trace.mark_complete(error=exc is not None)
+        if telemetry is not None:
+            telemetry.record_complete(p.trace)
+        if exc is not None:
+            p.future.set_exception(exc)
+        else:
+            p.future.set_result(result)
+
+    try:
+        if len(group) == 1:
+            deliver(group[0], group[0].request.run())
+            return
+        merged = [e for p in group for e in p.entries]
+        base = group[0].request
+        res = dataclasses.replace(base, queries=merged, qlens=None).run()
+        i0 = 0
+        for p in group:
+            i1 = i0 + len(p.entries)
+            deliver(p, _slice_result(res, i0, i1, p.single))
+            i0 = i1
+    except Exception as exc:                           # noqa: BLE001
+        for p in group:
+            if not p.future.done():
+                deliver(p, exc=exc)

@@ -1,0 +1,105 @@
+"""Bounded admission queue — the router's backpressure boundary.
+
+A request is *admitted* (enqueued with its client future) or *refused*
+at the door; once admitted it will always be answered (result or
+exception), so clients only need to handle ``QueueFull`` at submission.
+Two admission policies:
+
+  * ``'reject'`` — a full queue raises ``QueueFull`` immediately
+    (load-shedding; the closed-loop benchmark measures goodput as
+    completed/offered under this policy).
+  * ``'block'``  — a full queue blocks the submitting thread until space
+    frees or ``timeout`` elapses (then ``QueueFull``), propagating
+    backpressure into the client.
+
+The queue is deliberately FIFO and dumb: coalescing/priority decisions
+belong to the batcher, which drains whole windows at a time.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Optional
+
+
+class QueueFull(RuntimeError):
+    """The admission queue refused a request (bounded depth reached)."""
+
+
+class AdmissionQueue:
+    """Bounded FIFO of pending requests with block/reject admission."""
+
+    def __init__(self, maxsize: int = 256, *, admission: str = "block",
+                 timeout: Optional[float] = None):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', got "
+                             f"{admission!r}")
+        self.maxsize = maxsize
+        self.admission = admission
+        self.timeout = timeout
+        self._items = collections.deque()
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def put(self, item) -> int:
+        """Admit ``item``; returns the queue depth observed *after*
+        admission (telemetry). Raises ``QueueFull`` per the policy."""
+        with self._not_full:
+            if self.admission == "reject":
+                if len(self._items) >= self.maxsize:
+                    raise QueueFull(
+                        f"admission queue full ({self.maxsize} pending); "
+                        "retry later or raise max_queue")
+            else:
+                ok = self._not_full.wait_for(
+                    lambda: self._closed
+                    or len(self._items) < self.maxsize,
+                    timeout=self.timeout)
+                if not ok:
+                    raise QueueFull(
+                        f"admission queue full ({self.maxsize} pending) "
+                        f"after blocking {self.timeout}s")
+            if self._closed:
+                raise RuntimeError("router is closed")
+            self._items.append(item)
+            depth = len(self._items)
+            self._not_empty.notify()
+            return depth
+
+    def drain(self, max_items: Optional[int] = None) -> list:
+        """Pop every pending item (up to ``max_items``), FIFO order."""
+        with self._not_full:
+            n = len(self._items) if max_items is None \
+                else min(max_items, len(self._items))
+            out = [self._items.popleft() for _ in range(n)]
+            if out:
+                self._not_full.notify_all()
+            return out
+
+    def wait_nonempty(self, timeout: Optional[float] = None) -> bool:
+        """Block until at least one item is pending (or the queue closes).
+        Returns True if items are pending."""
+        with self._not_empty:
+            self._not_empty.wait_for(
+                lambda: self._closed or len(self._items) > 0,
+                timeout=timeout)
+            return len(self._items) > 0
+
+    def close(self):
+        """Wake every waiter; subsequent ``put`` raises."""
+        with self._lock:
+            self._closed = True
+            self._not_full.notify_all()
+            self._not_empty.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

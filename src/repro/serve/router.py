@@ -1,0 +1,198 @@
+"""The admission-controlled request router — the serve tier's front door.
+
+Life of a request::
+
+    client ──► submit() ──► AdmissionQueue ──► microbatch window ──►
+    group by coalesce_key ──► ONE ragged engine call per group
+    (pow-2 buckets inside) ──► slice per client ──► Future.result()
+
+``submit()`` validates through the shared ``SdtwRequest`` validator
+(invalid arguments are refused at the door, synchronously — never
+queued), applies backpressure per the admission policy (``QueueFull``),
+and returns a ``concurrent.futures.Future``. A background dispatcher
+drains the queue every ``window_ms`` and hands each window to the
+batcher; ``auto_dispatch=False`` gives deterministic manual control
+(tests and the closed-loop benchmark call ``drain()`` themselves).
+
+Shared across every tenant: one ``EnvelopeCache`` (injected into search
+requests that did not bring their own), one process-wide jit
+executable cache (coalesced groups reuse one compiled bucket shape per
+window — the whole point), one ``StreamSessionPool``, one ``Telemetry``.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.request import SdtwRequest, StreamRequest
+from repro.search.cache import EnvelopeCache
+
+from . import batcher
+from .queue import AdmissionQueue, QueueFull
+from .sessions import StreamSessionPool
+from .telemetry import RequestTrace, StatsSnapshot, Telemetry
+
+__all__ = ["Router", "RouterConfig", "QueueFull"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Serving knobs (defaults favour low latency over occupancy)."""
+    max_queue: int = 256          # admission bound (backpressure depth)
+    window_ms: float = 2.0        # microbatch coalescing window
+    admission: str = "block"      # 'block' | 'reject' on a full queue
+    block_timeout_s: Optional[float] = None   # None = wait forever
+    auto_dispatch: bool = True    # background dispatcher thread
+
+
+def _request_nq(req: SdtwRequest) -> int:
+    q = req.queries
+    if isinstance(q, (list, tuple)):
+        return len(q)
+    arr = np.asarray(q)
+    return 1 if arr.ndim == 1 else arr.shape[0]
+
+
+class Router:
+    """Admission queue + microbatcher + shared caches over the engine."""
+
+    def __init__(self, config: Optional[RouterConfig] = None, *,
+                 cache: Optional[EnvelopeCache] = None, **overrides):
+        if config is None:
+            config = RouterConfig(**overrides)
+        elif overrides:
+            raise ValueError("pass a RouterConfig or keyword overrides, "
+                             "not both")
+        self.config = config
+        self.cache = EnvelopeCache() if cache is None else cache
+        self.telemetry = Telemetry()
+        self.sessions = StreamSessionPool()
+        self._queue = AdmissionQueue(config.max_queue,
+                                     admission=config.admission,
+                                     timeout=config.block_timeout_s)
+        self._dispatch_lock = threading.Lock()
+        self._closed = False
+        self._thread = None
+        if config.auto_dispatch:
+            self._thread = threading.Thread(target=self._dispatch_loop,
+                                            name="repro-serve-dispatch",
+                                            daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, request=None, **kwargs) -> concurrent.futures.Future:
+        """Admit one request; returns its Future.
+
+        Accepts a prebuilt ``SdtwRequest`` or the kwargs surface
+        (``op='sdtw'`` default; unknown keys rejected loudly). Invalid
+        arguments raise here — at the door — with exactly the front-door
+        error messages; a full queue raises ``QueueFull``."""
+        if self._closed:
+            raise RuntimeError("router is closed")
+        if request is None:
+            request = SdtwRequest.from_kwargs(**kwargs)
+        elif kwargs:
+            raise ValueError("pass an SdtwRequest or kwargs, not both")
+        request.validate()
+        if request.op == "search_topk" and request.cache is None:
+            request = dataclasses.replace(request, cache=self.cache)
+        trace = RequestTrace(op=request.op, nq=_request_nq(request))
+        fut = concurrent.futures.Future()
+        pending = batcher.Pending(request=request, future=fut, trace=trace)
+        try:
+            depth = self._queue.put(pending)
+        except QueueFull:
+            self.telemetry.record_reject()
+            raise
+        trace.queue_depth = depth
+        self.telemetry.observe_depth(depth)
+        return fut
+
+    # Blocking conveniences — the offline call signatures, served.
+    def sdtw(self, queries, reference, qlens=None, **kw):
+        return self.submit(queries=queries, reference=reference,
+                           qlens=qlens, op="sdtw", **kw).result()
+
+    def search_topk(self, queries, reference, k: int = 1, **kw):
+        return self.submit(queries=queries, reference=reference,
+                           top_k=k, op="search_topk", **kw).result()
+
+    # ------------------------------------------------------------------
+    # streaming tenants
+    # ------------------------------------------------------------------
+
+    def open_stream(self, feed_key, tenant, request:
+                    Optional[StreamRequest] = None, **stream_kwargs):
+        """Attach a streaming tenant to a reference feed (see
+        ``StreamSessionPool``); search-style pruned sessions share the
+        router's envelope cache unless they bring their own."""
+        if request is None:
+            if stream_kwargs.get("prune") and "cache" not in stream_kwargs:
+                stream_kwargs["cache"] = self.cache
+            request = StreamRequest.from_kwargs(**stream_kwargs)
+        elif stream_kwargs:
+            raise ValueError("pass a StreamRequest or stream kwargs, "
+                             "not both")
+        return self.sessions.attach(feed_key, tenant, request)
+
+    def feed(self, feed_key, data) -> int:
+        return self.sessions.feed(feed_key, data)
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+
+    def drain(self) -> int:
+        """Process every pending request now (one microbatch window);
+        returns the number of requests dispatched. Thread-safe; the
+        manual-mode workhorse."""
+        with self._dispatch_lock:
+            window = self._queue.drain()
+            if not window:
+                return 0
+            for grp in batcher.group_window(window):
+                self.telemetry.record_dispatch(
+                    n_requests=len(grp),
+                    n_queries=sum(len(p.entries) for p in grp))
+                batcher.execute_group(grp, telemetry=self.telemetry)
+            return len(window)
+
+    def _dispatch_loop(self):
+        wait = threading.Event()
+        while not self._closed:
+            if not self._queue.wait_nonempty(timeout=0.1):
+                continue
+            # Let the microbatch accrue for one window, then drain it.
+            wait.wait(self.config.window_ms / 1000.0)
+            self.drain()
+
+    # ------------------------------------------------------------------
+    # lifecycle / observability
+    # ------------------------------------------------------------------
+
+    def stats(self) -> StatsSnapshot:
+        return self.telemetry.snapshot()
+
+    def close(self, *, drain: bool = True):
+        """Stop admitting; optionally answer everything still queued."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        if drain:
+            self.drain()
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,154 @@
+"""Per-request traces and router-level stats for the serve tier.
+
+Every admitted request carries a ``RequestTrace`` through its life:
+enqueue → dispatch (when the batcher pulled it into a merged engine
+call) → complete (result or error delivered to the client future). The
+``Telemetry`` aggregator folds finished traces into a running store the
+router exposes as an immutable ``StatsSnapshot`` — the numbers NATSA-
+style serving cares about: queue depth seen at admission, microbatch
+occupancy (how many client requests each engine dispatch amortized),
+and the latency split between waiting and computing.
+
+All timestamps are ``time.monotonic()`` floats (seconds); snapshots
+report microseconds, matching the benchmark harness row units.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+
+def _now() -> float:
+    return time.monotonic()
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a non-empty list."""
+    if not values:
+        return float("nan")
+    vs = sorted(values)
+    idx = min(len(vs) - 1, max(0, int(round(q / 100.0 * (len(vs) - 1)))))
+    return float(vs[idx])
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    """Lifecycle timestamps + context for one admitted request."""
+    op: str
+    nq: int                          # queries carried by this request
+    t_enqueue: float = dataclasses.field(default_factory=_now)
+    t_dispatch: Optional[float] = None
+    t_complete: Optional[float] = None
+    queue_depth: int = 0             # depth observed at admission
+    batch_requests: int = 0          # requests sharing the merged call
+    batch_queries: int = 0           # total queries in the merged call
+    error: bool = False
+
+    def mark_dispatch(self, *, batch_requests: int, batch_queries: int):
+        self.t_dispatch = _now()
+        self.batch_requests = batch_requests
+        self.batch_queries = batch_queries
+
+    def mark_complete(self, *, error: bool = False):
+        self.t_complete = _now()
+        self.error = error
+
+    @property
+    def queue_us(self) -> float:
+        if self.t_dispatch is None:
+            return float("nan")
+        return (self.t_dispatch - self.t_enqueue) * 1e6
+
+    @property
+    def latency_us(self) -> float:
+        if self.t_complete is None:
+            return float("nan")
+        return (self.t_complete - self.t_enqueue) * 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsSnapshot:
+    """Immutable view of the router's counters at one instant."""
+    completed: int
+    errors: int
+    rejected: int
+    dispatches: int                 # merged engine calls issued
+    coalesced_requests: int         # requests that shared a dispatch
+    queries_served: int
+    p50_latency_us: float
+    p99_latency_us: float
+    p50_queue_us: float
+    max_queue_depth: int
+    mean_batch_requests: float      # requests per dispatch (occupancy)
+    mean_batch_queries: float       # queries per dispatch
+    uptime_s: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Telemetry:
+    """Thread-safe aggregator of finished ``RequestTrace`` records."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._t0 = _now()
+        self._latencies: list[float] = []
+        self._queue_waits: list[float] = []
+        self._completed = 0
+        self._errors = 0
+        self._rejected = 0
+        self._dispatches = 0
+        self._coalesced = 0
+        self._queries = 0
+        self._max_depth = 0
+        self._batch_requests: list[int] = []
+        self._batch_queries: list[int] = []
+
+    def observe_depth(self, depth: int):
+        with self._lock:
+            self._max_depth = max(self._max_depth, depth)
+
+    def record_reject(self):
+        with self._lock:
+            self._rejected += 1
+
+    def record_dispatch(self, *, n_requests: int, n_queries: int):
+        with self._lock:
+            self._dispatches += 1
+            self._batch_requests.append(n_requests)
+            self._batch_queries.append(n_queries)
+            if n_requests > 1:
+                self._coalesced += n_requests
+
+    def record_complete(self, trace: RequestTrace):
+        with self._lock:
+            self._completed += 1
+            self._queries += trace.nq
+            if trace.error:
+                self._errors += 1
+            self._latencies.append(trace.latency_us)
+            if trace.t_dispatch is not None:
+                self._queue_waits.append(trace.queue_us)
+
+    def snapshot(self) -> StatsSnapshot:
+        with self._lock:
+            n_d = len(self._batch_requests)
+            return StatsSnapshot(
+                completed=self._completed,
+                errors=self._errors,
+                rejected=self._rejected,
+                dispatches=self._dispatches,
+                coalesced_requests=self._coalesced,
+                queries_served=self._queries,
+                p50_latency_us=percentile(self._latencies, 50),
+                p99_latency_us=percentile(self._latencies, 99),
+                p50_queue_us=percentile(self._queue_waits, 50),
+                max_queue_depth=self._max_depth,
+                mean_batch_requests=(sum(self._batch_requests) / n_d
+                                     if n_d else float("nan")),
+                mean_batch_queries=(sum(self._batch_queries) / n_d
+                                    if n_d else float("nan")),
+                uptime_s=_now() - self._t0)

@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.core.distances import accum_dtype, big
+from repro.core.request import StreamRequest
 from repro.core.sdtw import (default_excl_zone, sdtw_carry_init,
                              sdtw_chunk_batch, sdtw_chunk_batch_topk,
                              topk_fold_lastrow)
@@ -229,32 +230,22 @@ class StreamSession:
         if impl not in ("rowscan", "pallas"):
             raise ValueError(f"impl must be 'rowscan' or 'pallas' for a "
                              f"stream session, got {impl!r}")
-        if excl_mode not in engine_mod.EXCL_MODES:
-            raise ValueError(f"excl_mode must be one of "
-                             f"{engine_mod.EXCL_MODES}, got {excl_mode!r}")
-        if top_k is not None and (not isinstance(top_k, int) or top_k < 1):
-            raise ValueError(f"top_k must be a positive int, got {top_k!r}")
-        if excl_mode == "span" and top_k is None and not return_spans:
-            raise ValueError("excl_mode='span' only affects top-K "
-                            "suppression; pass top_k=")
-        if (excl_lo is None) != (excl_hi is None):
-            raise ValueError("excl_lo and excl_hi must be given together")
-        if prune and top_k is None:
-            raise ValueError("prune=True reports the top-K heap only; "
-                             "pass top_k=")
-        if prune and alert_threshold is not None:
-            raise ValueError("alerts need every tile's candidate row, "
-                             "which pruning skips; use prune=False for a "
-                             "threshold monitor")
-        if impl == "pallas" and excl_lo is not None:
-            raise ValueError("the pallas kernel does not support "
-                             "exclusion zones; use impl='rowscan'")
+        # The session-argument checks live with the shared validator in
+        # repro.core.request — one source for engine.stream(), the serve
+        # tier, and direct construction, so the rules cannot drift.
+        StreamRequest(
+            queries=queries, qlens=qlens, metric=metric, impl=impl,
+            chunk=chunk, top_k=top_k, excl_zone=excl_zone,
+            excl_mode=excl_mode, return_spans=return_spans,
+            return_positions=return_positions, excl_lo=excl_lo,
+            excl_hi=excl_hi, prune=prune, span_cap=span_cap,
+            alert_threshold=alert_threshold, on_alert=on_alert,
+            cache=cache, ref_key=ref_key, block_q=block_q,
+            block_m=block_m).validate_session()
 
         self.metric = metric
         self.impl = impl
         self.chunk = int(DEFAULT_STREAM_CHUNK if chunk is None else chunk)
-        if self.chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
         self.top_k = top_k
         self.excl_mode = excl_mode
         self.return_spans = bool(return_spans)

@@ -1,0 +1,225 @@
+"""The unified request surface (repro/core/request.py).
+
+The contract under test: the keyword front doors (``engine.sdtw``,
+``engine.stream``, ``search_topk``) are thin shims over
+``SdtwRequest``/``StreamRequest``, so the kwargs path and the request
+path must produce **bitwise-identical results and byte-identical error
+messages** — for every shape class the existing test matrices exercise.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import sdtw, stream
+from repro.core.request import SdtwRequest, StreamRequest
+from repro.search import search_topk
+
+
+def _as_np(res):
+    if isinstance(res, tuple):
+        return tuple(np.asarray(x) for x in res)
+    return np.asarray(res)
+
+
+def _assert_same(a, b):
+    if isinstance(a, tuple):
+        assert isinstance(b, tuple) and len(a) == len(b)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# kwargs path == request path, bitwise
+# ---------------------------------------------------------------------------
+
+def test_sdtw_request_equals_kwargs_every_shape_class(rng):
+    """Dense / single 1-D / padded+qlens / ragged / top-K / spans — the
+    request object reproduces the front door bitwise."""
+    r = rng.integers(-40, 40, 300).astype(np.int32)
+    dense = rng.integers(-40, 40, (3, 12)).astype(np.int32)
+    one = rng.integers(-40, 40, 9).astype(np.int32)
+    ragged = [rng.integers(-40, 40, n).astype(np.int32)
+              for n in (5, 12, 8, 12)]
+    qlens = np.array([12, 7, 10], np.int32)
+    cases = [
+        dict(queries=dense, reference=r),
+        dict(queries=one, reference=r),
+        dict(queries=dense, reference=r, qlens=qlens),
+        dict(queries=ragged, reference=r),
+        dict(queries=dense, reference=r, metric="square_diff"),
+        dict(queries=dense, reference=r, chunk=32),
+        dict(queries=dense, reference=r, top_k=3, excl_zone=4,
+             return_spans=True),
+        dict(queries=dense, reference=r, top_k=2, excl_mode="span"),
+        dict(queries=dense, reference=r, return_positions=True),
+        dict(queries=dense, reference=r, impl="wavefront"),
+        dict(queries=dense, reference=r, excl_lo=10, excl_hi=40),
+    ]
+    for kw in cases:
+        _assert_same(_as_np(sdtw(**kw)),
+                     _as_np(SdtwRequest(**kw).run()))
+
+
+def test_search_request_equals_kwargs(rng):
+    r = rng.integers(-40, 40, 600).astype(np.int32)
+    dense = rng.integers(-40, 40, (3, 16)).astype(np.int32)
+    ragged = [rng.integers(-40, 40, n).astype(np.int32) for n in (9, 16, 12)]
+    for kw in (dict(queries=dense, reference=r, top_k=2),
+               dict(queries=ragged, reference=r, top_k=3, excl_zone=5),
+               dict(queries=dense, reference=r, top_k=2, prune=False,
+                    chunk=64),
+               dict(queries=dense, reference=r, top_k=1, normalize=True)):
+        want = search_topk(kw["queries"], kw["reference"], kw["top_k"],
+                           **{k: v for k, v in kw.items()
+                              if k not in ("queries", "reference", "top_k")})
+        got = SdtwRequest(op="search_topk", **kw).run()
+        np.testing.assert_array_equal(np.asarray(want.distances),
+                                      np.asarray(got.distances))
+        np.testing.assert_array_equal(np.asarray(want.positions),
+                                      np.asarray(got.positions))
+        np.testing.assert_array_equal(np.asarray(want.starts),
+                                      np.asarray(got.starts))
+
+
+def test_stream_request_opens_equivalent_session(rng):
+    q = rng.integers(-40, 40, (3, 8)).astype(np.int32)
+    r = rng.integers(-40, 40, 200).astype(np.int32)
+    a = stream(q, chunk=32, top_k=2, excl_zone=4, return_spans=True)
+    b = StreamRequest(queries=q, chunk=32, top_k=2, excl_zone=4,
+                      return_spans=True).open()
+    for lo, hi in ((0, 90), (90, 137), (137, 200)):
+        a.feed(r[lo:hi])
+        b.feed(r[lo:hi])
+    ra, rb = a.results(), b.results()
+    np.testing.assert_array_equal(np.asarray(ra.distances),
+                                  np.asarray(rb.distances))
+    np.testing.assert_array_equal(np.asarray(ra.positions),
+                                  np.asarray(rb.positions))
+
+
+# ---------------------------------------------------------------------------
+# identical error messages (the api_redesign no-drift gate)
+# ---------------------------------------------------------------------------
+
+def _message(fn, *args, **kw):
+    with pytest.raises(ValueError) as ei:
+        fn(*args, **kw)
+    return str(ei.value)
+
+
+def test_error_messages_identical_kwargs_vs_request():
+    """Every rejection in the existing validation matrix lands the SAME
+    message whether raised through the kwargs front door or the request
+    object."""
+    q = jnp.zeros((2, 4), jnp.int32)
+    r = jnp.zeros(16, jnp.int32)
+    mesh = object()
+    cases = [
+        dict(excl_lo=5),
+        dict(impl="vibes"),
+        dict(impl="rowscan", chunk=8),
+        dict(impl="wavefront", mesh=mesh),
+        dict(impl="pallas", mesh=mesh),
+        dict(impl="chunked", mesh=mesh),
+        dict(impl="rowscan", top_k=2),
+        dict(impl="pallas", top_k=2),
+        dict(top_k=0),
+        dict(excl_mode="sideways"),
+        dict(excl_mode="span"),
+        dict(n_micro=2),
+        dict(mesh=mesh, mesh_shape=(1, 1)),
+    ]
+    for kw in cases:
+        got_kwargs = _message(sdtw, q, r, **kw)
+        got_request = _message(
+            SdtwRequest(queries=q, reference=r, **kw).run)
+        assert got_kwargs == got_request, kw
+
+    search_cases = [
+        dict(k=0),
+        dict(excl_mode="sideways"),
+        dict(excl_lo=3),
+        dict(engine_impl="vibes"),
+        dict(engine_impl="pallas", excl_lo=1, excl_hi=3),
+        dict(mesh=mesh),
+    ]
+    for kw in search_cases:
+        k = kw.pop("k", 1)
+        got_kwargs = _message(search_topk, q, r, k, **kw)
+        got_request = _message(
+            SdtwRequest(op="search_topk", queries=q, reference=r,
+                        top_k=k, **kw).run)
+        assert got_kwargs == got_request, kw
+
+    stream_cases = [
+        dict(impl="chunked"),
+        dict(excl_mode="sideways"),
+        dict(top_k=0),
+        dict(excl_lo=2),
+        dict(prune=True),
+        dict(prune=True, top_k=2, alert_threshold=1.0),
+        dict(impl="pallas", excl_lo=1, excl_hi=2),
+        dict(chunk=0),
+        dict(n_micro=2),
+    ]
+    for kw in stream_cases:
+        got_kwargs = _message(stream, q, **kw)
+        got_request = _message(StreamRequest(queries=q, **kw).open)
+        assert got_kwargs == got_request, kw
+
+
+# ---------------------------------------------------------------------------
+# request-object mechanics
+# ---------------------------------------------------------------------------
+
+def test_requests_are_frozen():
+    req = SdtwRequest(queries=np.zeros((1, 4)), reference=np.zeros(8))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        req.metric = "square_diff"
+    sreq = StreamRequest(queries=np.zeros((1, 4)))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        sreq.chunk = 3
+
+
+def test_from_kwargs_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown SdtwRequest argument"):
+        SdtwRequest.from_kwargs(queries=np.zeros((1, 4)),
+                                reference=np.zeros(8), exclzone=3)
+    with pytest.raises(ValueError, match="unknown StreamRequest argument"):
+        StreamRequest.from_kwargs(queries=np.zeros((1, 4)), chnk=16)
+
+
+def test_search_rejects_array_excl_zone_loudly():
+    """Historically ``int()`` silently truncated an array excl_zone; the
+    shared validator rejects it with a pointer to the path that honours
+    arrays."""
+    with pytest.raises(ValueError, match="scalar excl_zone"):
+        search_topk(np.zeros((2, 4), np.int32), np.zeros(16, np.int32),
+                    1, excl_zone=np.array([1, 2]))
+
+
+def test_coalesce_key_scalar_vs_array_semantics():
+    q = np.zeros((2, 4), np.int32)
+    r = np.zeros(16, np.int32)
+    a = SdtwRequest(queries=q, reference=r, top_k=2, excl_zone=3)
+    b = SdtwRequest(queries=q + 1, reference=r, top_k=2, excl_zone=3.0)
+    assert a.coalesce_key("ref") == b.coalesce_key("ref")
+    zone = np.array([1, 2])
+    c = SdtwRequest(queries=q, reference=r, top_k=2, excl_zone=zone)
+    d = SdtwRequest(queries=q, reference=r, top_k=2,
+                    excl_zone=zone.copy())
+    assert c.coalesce_key("ref") != d.coalesce_key("ref")
+    assert a.coalesce_key("ref") != a.coalesce_key("other-ref")
+
+
+def test_normalized_resolves_mesh_shape():
+    req = SdtwRequest(queries=np.zeros((1, 4), np.int32),
+                      reference=np.zeros(8, np.int32))
+    assert req.normalized() is req
+    shaped = dataclasses.replace(req, mesh_shape=1, impl="sharded")
+    norm = shaped.normalized()
+    assert norm.mesh_shape is None and norm.mesh is not None

@@ -1,0 +1,282 @@
+"""The serving tier: router coalescing, backpressure, session pool.
+
+The load-bearing gate: for any interleaving of concurrent clients, the
+router's answers are bitwise int32-identical to offline engine calls —
+coalescing into shared bucket dispatches must be invisible to every
+tenant.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine
+from repro.search import search_topk
+from repro.serve import QueueFull, Router, RouterConfig, StreamSessionPool
+
+
+def _mk(rng, nq, n, m=300):
+    q = rng.integers(-40, 40, (nq, n)).astype(np.int32)
+    r = rng.integers(-40, 40, m).astype(np.int32)
+    return q, r
+
+
+# ---------------------------------------------------------------------------
+# coalescing == offline, bitwise
+# ---------------------------------------------------------------------------
+
+def test_coalesced_window_equals_offline_per_client(rng):
+    """One drained window of compatible requests becomes ONE dispatch,
+    and every client's slice equals its own offline call bitwise."""
+    r = rng.integers(-40, 40, 300).astype(np.int32)
+    clients = [rng.integers(-40, 40, (nq, 12)).astype(np.int32)
+               for nq in (2, 3, 1, 4)]
+    router = Router(RouterConfig(auto_dispatch=False))
+    futs = [router.submit(queries=q, reference=r, top_k=2, excl_zone=4,
+                          return_spans=True) for q in clients]
+    assert router.drain() == len(clients)
+    stats = router.stats()
+    assert stats.dispatches == 1
+    assert stats.mean_batch_requests == len(clients)
+    for q, f in zip(clients, futs):
+        want = engine.sdtw(q, r, top_k=2, excl_zone=4, return_spans=True)
+        got = f.result(timeout=0)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+    router.close()
+
+
+def test_concurrent_clients_bitwise_and_counted(rng):
+    """Real threads through the auto-dispatching router: every client
+    sees its offline answer, and the stats count every request."""
+    r = rng.integers(-40, 40, 256).astype(np.int32)
+    clients = [rng.integers(-40, 40, (2, 10)).astype(np.int32)
+               for _ in range(6)]
+    results = [None] * len(clients)
+    with Router(window_ms=5.0) as router:
+        def worker(i):
+            results[i] = router.sdtw(clients[i], r)
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(clients))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = router.stats()
+    assert stats.completed == len(clients)
+    assert stats.errors == 0
+    assert stats.dispatches <= len(clients)
+    for q, got in zip(clients, results):
+        np.testing.assert_array_equal(np.asarray(engine.sdtw(q, r)),
+                                      np.asarray(got))
+
+
+def test_single_query_clients_unwrap_like_offline(rng):
+    """1-D clients coalesce too and still get scalar-shaped answers."""
+    r = rng.integers(-40, 40, 200).astype(np.int32)
+    qs = [rng.integers(-40, 40, n).astype(np.int32) for n in (7, 12, 9)]
+    router = Router(RouterConfig(auto_dispatch=False))
+    futs = [router.submit(queries=q, reference=r) for q in qs]
+    router.drain()
+    assert router.stats().dispatches == 1
+    for q, f in zip(qs, futs):
+        want = engine.sdtw(q, r)
+        got = f.result(timeout=0)
+        assert np.asarray(got).shape == np.asarray(want).shape == ()
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    router.close()
+
+
+def test_search_coalescing_equals_offline_batched(rng):
+    """Merged search requests equal ONE offline batched search_topk over
+    the concatenated queries (the LB thresholds are batch-shared by
+    design — same semantics as calling the batch offline)."""
+    r = rng.integers(-40, 40, 600).astype(np.int32)
+    qa = [rng.integers(-40, 40, 16).astype(np.int32) for _ in range(2)]
+    qb = [rng.integers(-40, 40, 16).astype(np.int32) for _ in range(3)]
+    router = Router(RouterConfig(auto_dispatch=False))
+    fa = router.submit(queries=qa, reference=r, op="search_topk", top_k=2,
+                       ref_key="feed")
+    fb = router.submit(queries=qb, reference=r, op="search_topk", top_k=2,
+                       ref_key="feed")
+    router.drain()
+    assert router.stats().dispatches == 1
+    want = search_topk(qa + qb, r, 2, ref_key="feed", cache=router.cache)
+    merged_d = np.concatenate([np.asarray(fa.result(timeout=0).distances),
+                               np.asarray(fb.result(timeout=0).distances)])
+    np.testing.assert_array_equal(merged_d, np.asarray(want.distances))
+    router.close()
+
+
+def test_incompatible_requests_do_not_coalesce(rng):
+    """Different semantics (metric) or different references must split
+    into separate dispatches."""
+    q, r = _mk(rng, 2, 8)
+    r2 = rng.integers(-40, 40, 300).astype(np.int32)
+    router = Router(RouterConfig(auto_dispatch=False))
+    f1 = router.submit(queries=q, reference=r)
+    f2 = router.submit(queries=q, reference=r, metric="square_diff")
+    f3 = router.submit(queries=q, reference=r2)
+    router.drain()
+    assert router.stats().dispatches == 3
+    np.testing.assert_array_equal(np.asarray(f1.result(timeout=0)),
+                                  np.asarray(engine.sdtw(q, r)))
+    np.testing.assert_array_equal(
+        np.asarray(f2.result(timeout=0)),
+        np.asarray(engine.sdtw(q, r, metric="square_diff")))
+    np.testing.assert_array_equal(np.asarray(f3.result(timeout=0)),
+                                  np.asarray(engine.sdtw(q, r2)))
+    router.close()
+
+
+def test_per_query_exclusion_arrays_never_coalesce(rng):
+    """Array-valued exclusion zones are sized to one request's batch —
+    even two clients sharing the array object must dispatch separately
+    (and still match offline bitwise)."""
+    r = rng.integers(-40, 40, 200).astype(np.int32)
+    q1 = rng.integers(-40, 40, (2, 8)).astype(np.int32)
+    q2 = rng.integers(-40, 40, (2, 8)).astype(np.int32)
+    lo, hi = np.array([3, 5]), np.array([9, 12])
+    router = Router(RouterConfig(auto_dispatch=False))
+    f1 = router.submit(queries=q1, reference=r, excl_lo=lo, excl_hi=hi)
+    f2 = router.submit(queries=q2, reference=r, excl_lo=lo, excl_hi=hi)
+    router.drain()
+    assert router.stats().dispatches == 2
+    for q, f in ((q1, f1), (q2, f2)):
+        np.testing.assert_array_equal(
+            np.asarray(f.result(timeout=0)),
+            np.asarray(engine.sdtw(q, r, excl_lo=lo, excl_hi=hi)))
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_policy(rng):
+    q, r = _mk(rng, 1, 6)
+    router = Router(RouterConfig(max_queue=2, admission="reject",
+                                 auto_dispatch=False))
+    router.submit(queries=q, reference=r)
+    router.submit(queries=q, reference=r)
+    with pytest.raises(QueueFull, match="full"):
+        router.submit(queries=q, reference=r)
+    assert router.stats().rejected == 1
+    router.drain()
+    assert router.stats().completed == 2
+    router.close()
+
+
+def test_backpressure_block_timeout(rng):
+    q, r = _mk(rng, 1, 6)
+    router = Router(RouterConfig(max_queue=1, admission="block",
+                                 block_timeout_s=0.05, auto_dispatch=False))
+    router.submit(queries=q, reference=r)
+    with pytest.raises(QueueFull, match="blocking"):
+        router.submit(queries=q, reference=r)
+    router.drain()
+    router.close()
+
+
+def test_invalid_requests_refused_at_the_door(rng):
+    """Validation runs at submit — the front-door message, raised
+    synchronously, nothing enqueued."""
+    q, r = _mk(rng, 2, 6)
+    router = Router(RouterConfig(auto_dispatch=False))
+    with pytest.raises(ValueError) as served:
+        router.submit(queries=q, reference=r, excl_lo=5)
+    with pytest.raises(ValueError) as offline:
+        engine.sdtw(q, r, excl_lo=5)
+    assert str(served.value) == str(offline.value)
+    with pytest.raises(ValueError, match="unknown SdtwRequest argument"):
+        router.submit(queries=q, reference=r, topk=2)
+    assert router.drain() == 0
+    router.close()
+
+
+def test_execution_errors_propagate_to_every_member(rng):
+    """A failure inside a merged dispatch answers every client future
+    instead of hanging the window (admitted == answered)."""
+    q, r = _mk(rng, 2, 8)
+    router = Router(RouterConfig(auto_dispatch=False))
+    bad = np.zeros((2, 2, 2), np.int32)       # 3-D queries explode in run()
+    f1 = router.submit(queries=bad, reference=r)
+    router.drain()
+    with pytest.raises(Exception):
+        f1.result(timeout=0)
+    assert router.stats().errors == 1
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# shared state across tenants
+# ---------------------------------------------------------------------------
+
+def test_envelope_cache_shared_across_tenants(rng):
+    q, r = _mk(rng, 2, 16, m=600)
+    router = Router(RouterConfig(auto_dispatch=False))
+    for _ in range(2):
+        f = router.submit(queries=q, reference=r, op="search_topk",
+                          top_k=1, ref_key="shared-feed")
+        router.drain()
+        f.result(timeout=0)
+    assert router.cache.hits >= 1
+    router.close()
+
+
+def test_session_pool_churn_and_snapshot_restore(rng):
+    ref = rng.integers(-40, 40, 512).astype(np.int32)
+    qa = rng.integers(-40, 40, (2, 16)).astype(np.int32)
+    qb = rng.integers(-40, 40, (3, 16)).astype(np.int32)
+    qc = rng.integers(-40, 40, (1, 16)).astype(np.int32)
+
+    pool = StreamSessionPool()
+    pool.attach("feed", "a", queries=qa, chunk=64, top_k=2)
+    pool.attach("feed", "b", queries=qb, chunk=64, top_k=2)
+    for i in range(0, 256, 128):
+        assert pool.feed("feed", ref[i:i + 128]) == 2
+
+    # churn: attach mid-feed → fresh start (only sees the suffix);
+    # detach mid-feed → prefix-only results, feed keeps flowing.
+    pool.attach("feed", "c", queries=qc, chunk=64, top_k=2)
+    with pytest.raises(ValueError, match="already attached"):
+        pool.attach("feed", "a", queries=qa, chunk=64)
+    res_b = pool.detach("feed", "b")
+    db, _ = engine.sdtw(qb, ref[:256], top_k=2, chunk=64)
+    np.testing.assert_array_equal(np.asarray(res_b.distances),
+                                  np.asarray(db))
+
+    snaps = pool.snapshot("feed")
+    assert sorted(snaps) == ["a", "c"]
+
+    pool.feed("feed", ref[256:])
+    live = pool.finalize("feed")
+
+    # the restored pool continues bit-for-bit on the same suffix
+    pool.restore("feed-replay", snaps)
+    pool.feed("feed-replay", ref[256:])
+    replay = pool.finalize("feed-replay")
+    for t in ("a", "c"):
+        np.testing.assert_array_equal(np.asarray(live[t].distances),
+                                      np.asarray(replay[t].distances))
+
+    da, _ = engine.sdtw(qa, ref, top_k=2, chunk=64)
+    np.testing.assert_array_equal(np.asarray(live["a"].distances),
+                                  np.asarray(da))
+    dc, _ = engine.sdtw(qc, ref[256:], top_k=2, chunk=64)
+    np.testing.assert_array_equal(np.asarray(live["c"].distances),
+                                  np.asarray(dc))
+
+
+def test_router_open_stream_and_stats(rng):
+    ref = rng.integers(-40, 40, 256).astype(np.int32)
+    q = rng.integers(-40, 40, (2, 8)).astype(np.int32)
+    with Router(RouterConfig(auto_dispatch=False)) as router:
+        router.open_stream("sensor", "t0", queries=q, chunk=32, top_k=2)
+        assert router.feed("sensor", ref) == 1
+        res = router.sessions.finalize("sensor")["t0"]
+        d, _ = engine.sdtw(q, ref, top_k=2, chunk=32)
+        np.testing.assert_array_equal(np.asarray(res.distances),
+                                      np.asarray(d))
+        snap = router.stats()
+        assert snap.completed == snap.dispatches == 0
