@@ -20,6 +20,18 @@ import argparse
 import json
 
 
+def _derived_value(row, key: str):
+    """Parse a ``key=<float>`` token out of a row's derived field
+    (``None`` when absent or non-numeric)."""
+    for token in (row.get("derived") or "").split(";"):
+        if token.startswith(key + "="):
+            try:
+                return float(token[len(key) + 1:])
+            except ValueError:
+                return None
+    return None
+
+
 def compare_rows(rows, baseline_rows, tolerance: float, min_us: float):
     """Compare fresh rows against a recorded baseline.
 
@@ -27,6 +39,13 @@ def compare_rows(rows, baseline_rows, tolerance: float, min_us: float):
     rows slower than ``baseline * (1 + tolerance)`` and missing are
     baseline rows whose module ran but which the fresh run no longer
     produces (a silently dropped benchmark is a coverage regression).
+
+    Latency-SLO gate: rows that carry a ``p99_us=`` derived token in
+    BOTH the baseline and the fresh run (the ``serve_bench`` offered-load
+    sweep) are additionally bounded at the tail — the fresh p99 must not
+    exceed ``baseline_p99 * (1 + tolerance)`` (same noise floor), so a
+    serving change that keeps the median but blows up the per-concurrency
+    tail still fails the gate.
     """
     fresh = {r["name"]: r for r in rows}
     prefixes_run = {name.split("/")[0] for name in fresh}
@@ -51,6 +70,16 @@ def compare_rows(rows, baseline_rows, tolerance: float, min_us: float):
                       f"{crow['us_per_call']:.0f}us ({ratio:.2f}x)")
         if not ok:
             regressions.append(name)
+        b99, c99 = _derived_value(brow, "p99_us"), _derived_value(crow,
+                                                                  "p99_us")
+        if b99 is not None and c99 is not None and b99 >= min_us:
+            ratio99 = c99 / b99
+            ok99 = ratio99 <= 1.0 + tolerance
+            tag = "ok      " if ok99 else "REGRESSED"
+            report.append(f"{tag} {name} [p99 SLO] {b99:.0f}us -> "
+                          f"{c99:.0f}us ({ratio99:.2f}x)")
+            if not ok99:
+                regressions.append(name + ":p99")
     return report, regressions, missing
 
 

@@ -1,18 +1,31 @@
 """Closed-loop offered-load sweep over the serving router.
 
 For each client count, N closed-loop threads hammer one ``Router``
-(submit → wait → repeat); rows report the client-observed latency split
-and goodput, plus the router correctness gate: every served answer is
-compared bitwise against the client's own offline ``engine.sdtw`` call
-(int32 inputs, so equality is exact) and the row carries
-``served_vs_offline=equal`` only if every comparison passed — CI pins
-that token.
+(submit → wait → repeat) configured the way production would be: the
+full device pool (``devices='all'``), a ``router.warmup`` sweep
+pre-compiling every pow-2 bucket on every device before traffic lands,
+the adaptive coalescing window, in-window dedup, and clients spread
+over two priority classes. Rows
+report the client-observed latency split and goodput, plus the router
+correctness gate: every served answer is compared bitwise against the
+client's own offline ``engine.sdtw`` call (int32 inputs, so equality is
+exact) and the row carries ``served_vs_offline=equal`` only if every
+comparison passed — CI pins that token. To exercise the dedup path,
+client pairs share query content (c ≥ 2 rows report ``dedup>0`` when
+twins landed in one window — opportunistic, so only the count is
+reported, not gated).
 
 Rows:
     serve_bench/closed_loop_c{N}   us_per_call = p50 client latency
         derived: p99_us, goodput_rps (completed requests / wall s),
                  occupancy (requests per engine dispatch),
+                 dedup (requests answered from a twin's call),
                  served_vs_offline
+
+The non-smoke sweep doubles as the latency-SLO regression gate: CI
+replays it with ``--only serve_bench --compare BENCH_baseline.json``,
+where the compare gate bounds BOTH us_per_call (p50) and the parsed
+``p99_us`` against the committed baseline rows.
 """
 from __future__ import annotations
 
@@ -30,16 +43,39 @@ def _closed_loop(*, clients, requests, nq, qlen, reflen, window_ms, seed=0):
 
     rng = np.random.default_rng(seed)
     reference = rng.integers(-40, 40, reflen).astype(np.int32)
-    queries = [rng.integers(-40, 40, (nq, qlen)).astype(np.int32)
-               for _ in range(clients)]
+    # Client pairs share query CONTENT (distinct arrays) so concurrent
+    # twins can dedup inside a window; odd client counts keep one solo.
+    base = [rng.integers(-40, 40, (nq, qlen)).astype(np.int32)
+            for _ in range((clients + 1) // 2)]
+    queries = [base[ci // 2].copy() for ci in range(clients)]
     offline = [np.asarray(engine.sdtw(q, reference)) for q in queries]
 
     flags = [True] * clients
-    config = RouterConfig(window_ms=window_ms, max_queue=4 * clients)
+    # Close the window once a 4-request bucket fills: high client counts
+    # then produce a steady stream of same-shape groups (spread over the
+    # pool's warm devices) instead of timer-cut windows of every size —
+    # each novel size is a never-compiled bucket shape, i.e. a
+    # multi-second XLA stall in the latency tail.
+    config = RouterConfig(window_ms=window_ms, max_queue=4 * clients,
+                          devices="all",
+                          window_full_queries=max(8, 4 * nq))
     with Router(config) as router:
+        # Production protocol: pre-compile every pow-2 bucket a window
+        # can form, on every device, before traffic lands — the jit
+        # cache is process-global, so across the sweep each bucket
+        # compiles exactly once per device.
+        bucket = 1 << max(0, nq - 1).bit_length()
+        while True:
+            router.warmup(queries=[np.zeros(qlen, np.int32)] * bucket,
+                          reference=reference)
+            if bucket >= nq * clients:
+                break
+            bucket *= 2
         def client(ci):
             for _ in range(requests):
-                got = np.asarray(router.sdtw(queries[ci], reference))
+                got = np.asarray(router.sdtw(
+                    queries[ci], reference,
+                    tenant=f"client{ci}", priority=ci % 2))
                 if not np.array_equal(got, offline[ci]):
                     flags[ci] = False
 
@@ -64,8 +100,9 @@ def main(smoke: bool = False):
 
     rows = []
     for clients in sweep:
-        # Warm the jit cache at the same fan-in so the measured window
-        # times serving, not the coalesced bucket shape's first compile.
+        # Shake out the serving plumbing at the same fan-in; executable
+        # compiles are handled by the in-loop ``router.warmup`` sweep
+        # (every pow-2 bucket x every device, before traffic).
         _closed_loop(clients=clients, requests=1, nq=nq, qlen=qlen,
                      reflen=reflen, window_ms=2.0)
         stats, goodput, equal = _closed_loop(
@@ -77,6 +114,7 @@ def main(smoke: bool = False):
             f"p99_us={stats.p99_latency_us:.0f};"
             f"goodput_rps={goodput:.1f};"
             f"occupancy={stats.mean_batch_requests:.2f};"
+            f"dedup={stats.deduped};"
             f"served_vs_offline={'equal' if equal else 'DIFF'}"))
     return rows
 

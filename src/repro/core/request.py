@@ -216,6 +216,15 @@ class SdtwRequest:
     block_q: Optional[int] = None
     block_m: Optional[int] = None
     op: str = "sdtw"
+    # --- serve-tier-only -------------------------------------------------
+    # Scheduling metadata for the admission queue (``repro.serve``):
+    # higher ``priority`` drains sooner (aging keeps lower classes
+    # starvation-free), ``tenant`` scopes per-tenant quotas. Both are
+    # ignored by ``run()`` and deliberately excluded from
+    # ``coalesce_key()`` — requests from different tenants/priorities
+    # still share one merged engine call once drained into a window.
+    priority: int = 0
+    tenant: Any = None
     # --- search_topk-only ------------------------------------------------
     prune: bool = True
     span_cap: Optional[int] = None
@@ -243,6 +252,16 @@ class SdtwRequest:
         Returns ``self`` so calls chain."""
         if self.op not in OPS:
             raise ValueError(f"op must be one of {OPS}, got {self.op!r}")
+        if not isinstance(self.priority, int) \
+                or isinstance(self.priority, bool):
+            raise ValueError(f"priority must be an int (higher drains "
+                             f"sooner), got {self.priority!r}")
+        try:
+            hash(self.tenant)
+        except TypeError:
+            raise ValueError(f"tenant must be hashable (it keys per-tenant "
+                             f"quotas), got {type(self.tenant).__name__}") \
+                from None
         if self.op == "search_topk":
             return self._validate_search()
         if self.impl not in IMPLS:

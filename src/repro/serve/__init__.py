@@ -12,6 +12,7 @@ byte-identical argument semantics and results.
 ``python -m repro.serve`` runs the closed-loop offered-load CLI.
 """
 from .batcher import execute_group, group_window
+from .pool import DevicePool
 from .queue import AdmissionQueue, QueueFull
 from .router import Router, RouterConfig
 from .sessions import StreamSessionPool
@@ -19,6 +20,7 @@ from .telemetry import RequestTrace, StatsSnapshot, Telemetry
 
 __all__ = [
     "AdmissionQueue",
+    "DevicePool",
     "QueueFull",
     "RequestTrace",
     "Router",

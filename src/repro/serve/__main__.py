@@ -32,9 +32,11 @@ def _make_workload(rng, *, nq, qlen, reflen):
 
 
 def run_load(router: Router, *, clients: int, requests: int, op: str,
-             top_k, nq: int, qlen: int, reflen: int, seed: int = 0):
+             top_k, nq: int, qlen: int, reflen: int, seed: int = 0,
+             priority_classes: int = 1):
     """Closed-loop load: each client thread submits ``requests`` calls
-    back-to-back. Returns (completed, rejected)."""
+    back-to-back (tenant ``client{ci}``, priority ``ci %
+    priority_classes``). Returns (completed, rejected)."""
     rng = np.random.default_rng(seed)
     reference, query_pool = _make_workload(rng, nq=nq, qlen=qlen,
                                            reflen=reflen)
@@ -47,9 +49,13 @@ def run_load(router: Router, *, clients: int, requests: int, op: str,
             try:
                 if op == "search_topk":
                     router.search_topk(q, reference, k=top_k or 1,
-                                       ref_key="bench-ref")
+                                       ref_key="bench-ref",
+                                       tenant=f"client{ci}",
+                                       priority=ci % priority_classes)
                 else:
-                    router.sdtw(q, reference, top_k=top_k)
+                    router.sdtw(q, reference, top_k=top_k,
+                                tenant=f"client{ci}",
+                                priority=ci % priority_classes)
                 completed[ci] += 1
             except QueueFull:
                 rejected[ci] += 1
@@ -81,24 +87,52 @@ def main(argv=None) -> int:
     ap.add_argument("--qlen", type=int, default=128)
     ap.add_argument("--reflen", type=int, default=4096)
     ap.add_argument("--window-ms", type=float, default=2.0,
-                    help="microbatch coalescing window (default 2 ms)")
+                    help="base microbatch coalescing window (default 2 ms; "
+                         "the window adapts — closes early when "
+                         "--window-full queries are pending, stretches to "
+                         "--window-max-ms under light load)")
+    ap.add_argument("--window-max-ms", type=float, default=None,
+                    help="stretch bound for the adaptive window "
+                         "(default 8 x --window-ms)")
+    ap.add_argument("--window-full", type=int, default=64,
+                    help="pending-query count that closes a window early "
+                         "(a pow-2 bucket target; default 64)")
     ap.add_argument("--max-queue", type=int, default=256,
                     help="admission queue depth (default 256)")
     ap.add_argument("--admission", choices=("block", "reject"),
                     default="block")
+    ap.add_argument("--devices", type=str, default=None,
+                    help="device pool: 'all', an int (first-N local "
+                         "devices), or unset for the process default")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="spread clients over N priority classes "
+                         "(client i gets priority i %% N; default 1)")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="max pending requests per tenant (default none)")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="disable in-window identical-request dedup")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", type=str, default=None,
                     help="also write the snapshot to this path")
     args = ap.parse_args(argv)
 
+    devices = args.devices
+    if devices is not None and devices != "all":
+        devices = int(devices)
     config = RouterConfig(max_queue=args.max_queue,
                           window_ms=args.window_ms,
-                          admission=args.admission)
+                          window_max_ms=args.window_max_ms,
+                          window_full_queries=args.window_full,
+                          admission=args.admission,
+                          devices=devices,
+                          tenant_quota=args.tenant_quota,
+                          dedup=not args.no_dedup)
     with Router(config) as router:
         completed, rejected = run_load(
             router, clients=args.clients, requests=args.requests,
             op=args.op, top_k=args.top_k, nq=args.nq, qlen=args.qlen,
-            reflen=args.reflen, seed=args.seed)
+            reflen=args.reflen, seed=args.seed,
+            priority_classes=max(1, args.priority_classes))
         snap = router.stats().as_dict()
     snap["offered"] = args.clients * args.requests
     snap["client_completed"] = completed
