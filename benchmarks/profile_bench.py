@@ -1,0 +1,158 @@
+"""Matrix-profile benchmark: the self-join at paper scale, plus the
+correctness gates CI runs on every push.
+
+Timing: a pruned ``matrix_profile`` over a heterogeneous (piecewise
+level-shifted) series — the regime the envelope cascade targets, and the
+paper's headline workload shape (§V: seismology-length records). The
+non-smoke row runs M = 2^20 samples under bounded memory: the window
+batch is the only O(batch · window) allocation, so the series itself
+dominates.
+
+Gates (smoke rows, asserted by the bench-smoke CI job):
+
+  * ``profile_vs_oracle=equal`` — the unpruned profile is int32-bitwise
+    equal (distance AND span) to an inline brute-force banned-column DP,
+    batch and streaming both;
+  * ``stream_vs_batch=equal`` — ``StreamProfile`` fed in ragged pieces
+    (with a mid-stream flush) reproduces the batch profile bitwise;
+  * ``pruned=<kim+keogh>/<total>`` — the cascade actually prunes on the
+    heterogeneous series.
+"""
+import functools
+
+import numpy as np
+
+from repro.search.profile import matrix_profile
+from repro.stream import StreamProfile
+
+from .common import emit, time_call
+
+
+def _heterogeneous_series(rng, m: int, seg: int):
+    levels = rng.integers(-1500, 1500, -(-m // seg))
+    return np.concatenate([
+        lvl + rng.normal(0, 40, seg) for lvl in levels])[:m].astype(np.int32)
+
+
+def _oracle_nn(series, window, stride, zone):
+    """Brute-force per-window nearest neighbor under banned columns:
+    full float64 DP per window, leftmost-argmin end, smallest-start tie
+    break — the same contract as tests/oracle.py, inlined so the bench
+    is self-contained."""
+    series = np.asarray(series, np.float64)
+    m = len(series)
+    starts = np.arange(0, m - window + 1, stride)
+    out = []
+    for s in starts:
+        q = series[s:s + window]
+        d0 = np.abs(q[0] - series)
+        d0[max(s - zone, 0):s + window + zone] = np.inf
+        S, T = d0, np.arange(m)
+        for i in range(1, window):
+            di = np.abs(q[i] - series)
+            di[max(s - zone, 0):s + window + zone] = np.inf
+            S2 = np.empty(m)
+            T2 = np.empty(m, np.int64)
+            S2[0] = S[0] + di[0]
+            T2[0] = T[0]
+            for j in range(1, m):
+                cands = ((S[j - 1], T[j - 1]), (S2[j - 1], T2[j - 1]),
+                         (S[j], T[j]))
+                v = min(c[0] for c in cands)
+                S2[j] = di[j] + v
+                T2[j] = min(c[1] for c in cands if c[0] == v)
+            S, T = S2, T2
+        j = int(np.argmin(S))
+        out.append((S[j], int(T[j]), j) if np.isfinite(S[j])
+                   else (np.inf, -1, -1))
+    return out
+
+
+def _gate_oracle(rows, rng):
+    """Batch AND streaming bitwise against the brute-force DP."""
+    m, w, chunk = 97, 8, 16
+    series = rng.integers(-30, 30, m).astype(np.int32)
+    want = _oracle_nn(series, w, 1, w // 2)
+    prof = matrix_profile(series, w, prune=False, chunk=chunk)
+    sp = StreamProfile(w, chunk=chunk)
+    cuts = [0, 13, 14, 40, 41, 90, m]
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        sp.feed(series[a:b])
+    sprof = sp.results()
+    for p, label in ((prof, "batch"), (sprof, "stream")):
+        for i, (d, s, e) in enumerate(want):
+            if np.isfinite(d):
+                got = (float(p.nn_dist[i]), int(p.nn_start[i]),
+                       int(p.nn_end[i]))
+                if got != (d, s, e):
+                    raise AssertionError(
+                        f"{label} profile diverged from oracle at window "
+                        f"{i}: {got} vs {(d, s, e)}")
+            elif p.valid[i]:
+                raise AssertionError(
+                    f"{label} window {i} should be invalid")
+    rows.append(emit(f"profile/oracle_m{m}_w{w}", 0.0,
+                     "profile_vs_oracle=equal"))
+
+
+def _gate_stream(rows, rng):
+    """Ragged feeds + a mid-stream flush reproduce the batch bitwise."""
+    m, w, chunk = 211, 12, 32
+    series = _heterogeneous_series(rng, m, 40)
+    want = matrix_profile(series, w, prune=False, chunk=chunk, k=3)
+    sp = StreamProfile(w, chunk=chunk, k=3)
+    sp.feed(series[:55])
+    sp.flush()
+    sp.feed(series[55:60])
+    sp.feed(series[60:])
+    got = sp.results()
+    for field in ("nn_dist", "nn_start", "nn_end", "motif_a", "motif_b",
+                  "discord_idx"):
+        if not np.array_equal(getattr(got, field), getattr(want, field)):
+            raise AssertionError(
+                f"streamed profile diverged from batch on {field}")
+    rows.append(emit(f"profile/stream_m{m}_w{w}", 0.0,
+                     "stream_vs_batch=equal"))
+
+
+def main(smoke: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    _gate_oracle(rows, rng)
+    _gate_stream(rows, rng)
+
+    # Timed self-join: pruned profile over the heterogeneous series.
+    # Non-smoke is the paper-scale point: M = 2^20 samples, bounded
+    # memory (nothing O(M^2); the batch slab is 256 x 64 samples).
+    # Chunk dispatch is per batch (a chunk runs if any batchmate needs
+    # it), so the batch is kept small enough that its windows stay
+    # localized — distant level-shifted chunks then prune for the whole
+    # batch.
+    m, w, stride, chunk, batch = ((4096, 32, 16, 128, 16) if smoke
+                                  else (1 << 20, 64, 1 << 16, 4096, 8))
+    series = _heterogeneous_series(rng, m, 8 * chunk // 4)
+    call = functools.partial(matrix_profile, series, w, stride=stride,
+                             chunk=chunk, k=3, batch=batch)
+    prof = call()                      # warms the envelope + compile
+    us = time_call(call, repeats=1, warmup=0)
+    nw = prof.starts.shape[0]
+    rows.append(emit(
+        f"profile/selfjoin_m{m}_w{w}_s{stride}", us,
+        f"nw={nw};pruned={prof.chunks_pruned}/{prof.chunks_total};"
+        f"kim={prof.chunks_pruned_kim};keogh={prof.chunks_pruned_keogh};"
+        f"motifs={len(prof.motifs)};discords={len(prof.discords)}"))
+
+    # Pruned distances must still be bitwise-exact vs the unpruned
+    # engine path (spans may legally differ on exact ties). Smoke
+    # verifies every window; non-smoke subsamples every 4th window (a
+    # 4x-stride profile lands on the same starts and the same exclusion
+    # bands) so the gate costs a quarter pass, not a full one.
+    sub = 1 if smoke else 4
+    exact = matrix_profile(series, w, stride=stride * sub, chunk=chunk,
+                           prune=False)
+    if not np.array_equal(prof.nn_dist[::sub], exact.nn_dist):
+        raise AssertionError("pruned profile distances diverged from "
+                             "the exact engine path")
+    rows.append(emit(f"profile/pruned_vs_exact_m{m}", 0.0,
+                     "bitwise_equal=yes"))
+    return rows

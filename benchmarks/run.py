@@ -104,9 +104,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (common, endurance, fig09_latency_sweep, fig10_energy_sweep,
-                   fig11_12_dataset_sweep, fig13_scaling, roofline_table,
-                   sdtw_kernel_bench, search_bench, serve_bench,
-                   table6_speedups)
+                   fig11_12_dataset_sweep, fig13_scaling, profile_bench,
+                   roofline_table, sdtw_kernel_bench, search_bench,
+                   serve_bench, table6_speedups)
     mods = [
         ("fig09_latency_sweep", fig09_latency_sweep.main),
         ("fig10_energy_sweep", fig10_energy_sweep.main),
@@ -117,6 +117,7 @@ def main(argv=None):
         ("sdtw_kernel_bench",
          lambda: sdtw_kernel_bench.main(smoke=args.smoke)),
         ("search_bench", lambda: search_bench.main(smoke=args.smoke)),
+        ("profile_bench", lambda: profile_bench.main(smoke=args.smoke)),
         ("serve_bench", lambda: serve_bench.main(smoke=args.smoke)),
         ("roofline_table", roofline_table.main),
     ]

@@ -68,6 +68,14 @@ The heap rides the chunk boundary carry (streaming/sharded paths).
 ``(dists (nq,), positions (nq,))`` and is supported on every path (the
 Pallas kernel tracks the best end position in its carry).
 
+The layers above compose this machinery rather than re-deriving it:
+``repro.search.search_topk`` puts the LB cascade in front of the chunked
+top-K path, and ``repro.search.profile.matrix_profile`` (with its
+streaming twin ``repro.stream.StreamProfile``) runs the self-join matrix
+profile — every sliding window of a series as a query batch against the
+series itself, trivial matches banned via per-query ``excl_lo/excl_hi``
+in sample units — returning motif pairs and top-K discords.
+
 Ragged batches: a *list* of 1-D queries with mixed lengths is bucketed —
 each query is padded up to the next power-of-two length (min
 ``MIN_BUCKET``) and queries sharing a bucket run as one batched call. The

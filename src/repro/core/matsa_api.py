@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine
-from .sdtw import self_join_windows
+from .sdtw import self_join_exclusion, self_join_windows
 
 MODES = ("query_filtering", "self_join")
 
@@ -29,6 +29,7 @@ class MatsaResult:
     distances: jnp.ndarray          # (n_queries,) sDTW distance per query
     anomalies: Optional[jnp.ndarray]  # (n_queries,) bool, if threshold given
     window_starts: Optional[jnp.ndarray] = None  # self_join only
+    profile: Optional[object] = None  # self_join: the full ProfileResult
 
 
 def matsa(reference,
@@ -58,6 +59,15 @@ def matsa(reference,
     All distance computation routes through ``repro.core.engine.sdtw`` —
     ``impl`` (default 'auto'), ``chunk`` (reference streaming tile), and
     ``mesh`` (multi-device reference sharding) pass straight through.
+
+    Self-join with ``exclusion=True``, ``impl='auto'`` and no ``mesh``
+    routes through ``repro.search.profile.matrix_profile`` (exact,
+    ``prune=False``): windows are processed in bounded batches instead
+    of one (nw, window) slab, distances are bitwise-identical (the
+    streamed top-1 *is* the engine's answer), and the returned
+    ``MatsaResult.profile`` carries the full matrix profile — spans,
+    motif pairs, discords. Exclusion zones are always derived in
+    **sample** units via ``self_join_exclusion`` (stride-invariant).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -67,12 +77,25 @@ def matsa(reference,
     if mode == "self_join":
         if window is None:
             raise ValueError("self_join mode requires window=")
+        if exclusion and impl == "auto" and mesh is None:
+            from repro.search.profile import matrix_profile
+            prof = matrix_profile(np.asarray(reference), window,
+                                  stride=stride, metric=dist_metric,
+                                  chunk=chunk, prune=False)
+            distances = jnp.asarray(prof.nn_dist)
+            anomalies = None
+            if anomaly_threshold is not None:
+                anomalies = distances > jnp.asarray(anomaly_threshold,
+                                                    distances.dtype)
+            return MatsaResult(distances=distances, anomalies=anomalies,
+                               window_starts=jnp.asarray(prof.starts,
+                                                         jnp.int32),
+                               profile=prof)
         queries, window_starts = self_join_windows(reference, window, stride)
         nq = queries.shape[0]
         qlens = jnp.full((nq,), window, jnp.int32)
         if exclusion:
-            excl_lo = jnp.maximum(window_starts - window // 2, 0)
-            excl_hi = window_starts + window + window // 2
+            excl_lo, excl_hi = self_join_exclusion(window_starts, window)
         else:
             excl_lo = jnp.full((nq,), -1, jnp.int32)
             excl_hi = jnp.full((nq,), -1, jnp.int32)

@@ -711,8 +711,35 @@ def sdtw_batch(queries, reference, qlens=None, metric: str = "abs_diff",
 
 def self_join_windows(reference, window: int, stride: int = 1):
     """Extract sliding windows (the paper's self_join mode: slices of the
-    reference compared against the reference itself)."""
+    reference compared against the reference itself).
+
+    ``starts`` are window start positions in **sample** units — for
+    ``stride > 1`` they are *not* consecutive window indices. Every
+    consumer deriving exclusion zones from them (``self_join_exclusion``,
+    ``matsa``, ``repro.search.profile``) must stay in sample space."""
     m = reference.shape[0]
     starts = jnp.arange(0, m - window + 1, stride)
     idx = starts[:, None] + jnp.arange(window)[None, :]
     return reference[idx], starts
+
+
+def self_join_exclusion(starts, window: int, zone: int = None):
+    """Trivial-match exclusion band per self-join window, in sample units.
+
+    A window occupying samples ``[s, s + window)`` must not be matched
+    against itself or a near-identical shifted copy; the matrix-profile
+    convention bans reference columns within ``zone`` samples (default
+    ``window // 2``) of the window's own extent.
+
+    ``starts`` must be sample positions (what ``self_join_windows``
+    returns), NOT window indices — the band is then stride-invariant:
+    with ``stride > 1`` each window still bans exactly
+    ``[s - zone, s + window + zone)`` *samples*, never a range scaled by
+    the window-index spacing. Returns ``(excl_lo, excl_hi)`` int32
+    arrays for ``engine.sdtw``'s half-open banned-column range.
+    """
+    starts = jnp.asarray(starts, jnp.int32)
+    z = jnp.int32(window // 2 if zone is None else int(zone))
+    lo = jnp.maximum(starts - z, 0)
+    hi = starts + jnp.int32(window) + z
+    return lo, hi

@@ -3,15 +3,19 @@
 ``search_topk`` is the query-answering layer: lower-bound pruning
 (LB_Kim / LB_Keogh over a cached per-chunk envelope) in front of the
 engine's chunk-carry DP, returning the K best, exclusion-zone-distinct
-match end positions per query.
+match end positions per query. ``matrix_profile`` rides it for the
+self-join: the full sDTW matrix profile of a series under bounded
+memory, with motif pairs and top-K discords.
 """
 from .cache import DEFAULT_CACHE, EnvelopeCache
 from .lower_bounds import (chunk_envelope, lb_cascade, windowed_envelope,
                            znorm, znorm_padded)
+from .profile import ProfileResult, matrix_profile
 from .search import SearchResult, default_chunk, search_topk
 
 __all__ = [
     "search_topk", "SearchResult", "default_chunk",
+    "matrix_profile", "ProfileResult",
     "EnvelopeCache", "DEFAULT_CACHE",
     "chunk_envelope", "windowed_envelope", "lb_cascade",
     "znorm", "znorm_padded",

@@ -1,0 +1,269 @@
+"""The sDTW matrix profile: self-join motifs and discords at scale.
+
+The paper's headline scenario (§I, §V) is anomaly discovery in long
+recordings — ECG, seismology — and the matrix profile is the standard
+product for it: for every sliding window of a series, the distance to its
+nearest *non-trivial* match elsewhere in the same series. Low
+nearest-neighbor distance = a repeated pattern (motif); high = a
+subsequence unlike anything else (discord / anomaly).
+
+``matrix_profile`` composes the machinery already in the stack instead of
+adding a second DP:
+
+  * windows follow ``repro.core.sdtw.self_join_windows``' convention
+    (starts ``arange(0, M - window + 1, stride)`` in sample units) but
+    are sliced per bounded **batch** — at no point are all O(M) windows
+    (an O(M·window) array for stride=1) materialized at once, and nothing
+    is ever O(M²);
+  * trivial-match suppression is ``self_join_exclusion`` — banned
+    reference columns in **sample** units (stride-invariant), flowing
+    through the engine's per-query ``excl_lo``/``excl_hi`` masks;
+  * each batch runs through ``search_topk`` with the LB_Kim/LB_Keogh
+    cascade; the reference envelope is computed once and shared across
+    all batches through a single ``EnvelopeCache`` entry (the chunk size
+    is pinned up front so every batch maps to the same cache key);
+  * motif pairs (mutually nearest, exclusion-distinct) and top-K
+    discords are host-side greedy reductions over the finished profile
+    (``repro.core.topk.mutual_nearest_pairs`` / ``discord_select``).
+
+Exactness: with ``prune=False`` every per-window nearest-neighbor
+(distance, start, end) triple is the engine's exact streamed answer —
+int32-bitwise against the brute-force all-pairs oracle (the acceptance
+gate in ``benchmarks/profile_bench.py`` and ``tests/test_profile.py``).
+With ``prune=True`` two caveats apply: distances inherit ``search_topk``'s
+span-cap caveat — a nearest neighbor whose alignment spans more than
+``span_cap`` reference columns (default ``2 * window``) may be missed or
+scored from truncated context; for profile windows (span ≈ window) the
+default cap is generous, and pruned distances are bitwise-exact on every
+tested shape. And when two spans *tie* on distance, the pruned path may
+report a different (equally optimal) witness span than the unpruned
+leftmost-end convention: pruning admissibly skips chunks that merely tie
+the incumbent, and batch composition decides which tying chunks get
+dispatched at all.
+
+Memory: O(batch · window) for the query slabs + O(M) for the series and
+its envelope + O(nw) for the profile itself.
+
+``repro.stream.profile.StreamProfile`` is the incremental variant —
+appending samples extends the reference *and* admits new windows — and
+``matsa(mode='self_join')`` routes through here by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import accum_dtype, big
+from repro.core.sdtw import self_join_exclusion
+from repro.core.topk import discord_select, mutual_nearest_pairs
+
+from . import cache as cache_mod
+from .search import default_chunk, search_topk
+
+
+@dataclasses.dataclass
+class ProfileResult:
+    """The matrix profile of one series plus its motif/discord reductions.
+
+    Per-window arrays are (nw,), indexed by window number (window i
+    starts at sample ``starts[i] = i * stride``):
+
+      * ``nn_dist``: accumulator-dtype distance to the window's nearest
+        admissible neighbor — ``BIG`` (int32 ceiling / inf) when the
+        exclusion band leaves no admissible reference column (check
+        ``valid``; such windows are *never* selected as motifs or
+        discords, so the padding sentinel cannot masquerade as the
+        largest anomaly).
+      * ``nn_start`` / ``nn_end``: the matched span in global sample
+        positions (the DP start-pointer lane / last-row end); -1 when
+        invalid.
+      * ``nn_window``: nearest window index ``round(nn_start / stride)``
+        clipped to [0, nw) — the self-join neighbor used for the
+        mutual-nearest motif test; -1 when invalid.
+
+    Motifs and discords are (k,) greedy selections (see
+    ``repro.core.topk``): ``motif_a``/``motif_b`` are window indices with
+    ``motif_dist`` the cheaper direction's distance, padded (-1, -1,
+    inf); ``discord_idx``/``discord_dist`` are padded (-1, -inf).
+
+    Tile telemetry sums ``search_topk``'s counters over all batches.
+    """
+    window: int
+    stride: int
+    k: int
+    starts: np.ndarray
+    nn_dist: np.ndarray
+    nn_start: np.ndarray
+    nn_end: np.ndarray
+    nn_window: np.ndarray
+    motif_a: np.ndarray
+    motif_b: np.ndarray
+    motif_dist: np.ndarray
+    discord_idx: np.ndarray
+    discord_dist: np.ndarray
+    excl_zone: int = 0
+    chunk: int = 0
+    chunks_total: int = 0
+    chunks_pruned_kim: int = 0
+    chunks_pruned_keogh: int = 0
+    chunks_processed: int = 0
+
+    @property
+    def chunks_pruned(self) -> int:
+        return self.chunks_pruned_kim + self.chunks_pruned_keogh
+
+    @property
+    def valid(self) -> np.ndarray:
+        """(nw,) bool: windows with an admissible nearest neighbor —
+        False rows carry (BIG, -1, -1, -1) padding, masked out of every
+        motif/discord selection."""
+        return self.nn_end >= 0
+
+    @property
+    def motifs(self):
+        """Non-padding motif pairs as [(a, b, dist)] python tuples."""
+        keep = self.motif_a >= 0
+        return [(int(a), int(b), float(d)) for a, b, d in
+                zip(self.motif_a[keep], self.motif_b[keep],
+                    self.motif_dist[keep])]
+
+    @property
+    def discords(self):
+        """Non-padding discords as [(idx, dist)] python tuples."""
+        keep = self.discord_idx >= 0
+        return [(int(i), float(d)) for i, d in
+                zip(self.discord_idx[keep], self.discord_dist[keep])]
+
+    @property
+    def spans(self) -> np.ndarray:
+        """(nw, 2) stacked (nn_start, nn_end) spans; (-1, -1) rows are
+        invalid windows."""
+        return np.stack([self.nn_start, self.nn_end], axis=-1)
+
+
+def _assemble_profile(window, stride, k, starts, nn_dist, nn_start, nn_end,
+                      excl_zone, chunk, stats) -> ProfileResult:
+    """Mask sentinels, derive neighbor window indices, run the motif and
+    discord reductions — shared by the batch and streaming variants so
+    the two can only differ in how the nn arrays were produced."""
+    starts = np.asarray(starts, np.int64)
+    nn_dist = np.asarray(nn_dist)
+    nn_start = np.asarray(nn_start, np.int64)
+    nn_end = np.asarray(nn_end, np.int64)
+    nw = starts.shape[0]
+    ceiling = big(nn_dist.dtype)
+    valid = (nn_end >= 0) & (nn_dist < ceiling)
+    # Invalid rows get the canonical padding triple so no half-set
+    # sentinel (a BIG distance with a live position, or vice versa) can
+    # leak into downstream consumers.
+    nn_start = np.where(valid, nn_start, -1)
+    nn_end = np.where(valid, nn_end, -1)
+    nn_window = np.where(
+        valid,
+        np.clip((nn_start + stride // 2) // stride, 0, nw - 1), -1)
+    dist_f = np.where(valid, nn_dist.astype(np.float64), np.inf)
+    ma, mb, md = mutual_nearest_pairs(dist_f, nn_window, starts, k,
+                                      excl_zone)
+    di, dd = discord_select(dist_f, starts, k, excl_zone)
+    return ProfileResult(
+        window=int(window), stride=int(stride), k=int(k), starts=starts,
+        nn_dist=nn_dist, nn_start=nn_start, nn_end=nn_end,
+        nn_window=nn_window, motif_a=ma, motif_b=mb, motif_dist=md,
+        discord_idx=di, discord_dist=dd, excl_zone=int(excl_zone),
+        chunk=int(chunk), chunks_total=stats[0],
+        chunks_pruned_kim=stats[1], chunks_pruned_keogh=stats[2],
+        chunks_processed=stats[3])
+
+
+def matrix_profile(series, window: int, stride: int = 1, k: int = 1, *,
+                   metric: str = "abs_diff", chunk: Optional[int] = None,
+                   prune: bool = True, span_cap: Optional[int] = None,
+                   excl_zone: Optional[int] = None, batch: int = 256,
+                   cache: Optional[cache_mod.EnvelopeCache] = None,
+                   ref_key=None,
+                   engine_impl: str = "auto") -> ProfileResult:
+    """Full sDTW matrix profile of ``series`` against itself.
+
+    Args:
+      series:    (M,) the series; every length-``window`` sliding window
+                 (step ``stride``) is matched against the whole series.
+      window:    subsequence length (the profile's "m" parameter).
+      stride:    window step in samples — stride > 1 thins the *query*
+                 side only; every window still searches the full series.
+      k:         motif pairs / discords to report (per-window NN is
+                 always top-1).
+      metric:    'abs_diff' | 'square_diff'.
+      chunk:     pruning tile (default ``default_chunk(M, window)``) —
+                 pinned once so all batches share one envelope entry.
+      prune:     LB_Kim/LB_Keogh cascade (see module docstring for the
+                 span-cap caveat); ``False`` = exact engine streaming.
+      span_cap:  pruned-path alignment-span cap (default ``2 * window``).
+      excl_zone: trivial-match radius in **samples** (default
+                 ``window // 2``): window at sample s bans reference
+                 columns ``[s - excl_zone, s + window + excl_zone)`` and
+                 the same radius separates reported motifs/discords.
+      batch:     windows per ``search_topk`` call — the memory knob:
+                 peak extra memory is O(batch · window).
+      cache/ref_key: envelope reuse across *calls* (per-call reuse across
+                 batches is automatic — a content fingerprint is derived
+                 once when no key is given).
+      engine_impl: DP backend for surviving chunks ('auto'/'rowscan'/
+                 'pallas' — pallas requires no exclusion, so the profile
+                 forces rowscan under 'auto').
+
+    Returns a ``ProfileResult``. Never materializes O(M²) — see the
+    module docstring for the memory bound.
+    """
+    series = np.asarray(series)
+    if series.ndim != 1:
+        raise ValueError(f"series must be 1-D, got shape {series.shape}")
+    m = series.shape[0]
+    if not 1 <= window <= m:
+        raise ValueError(f"window must be in [1, {m}], got {window}")
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    zone = window // 2 if excl_zone is None else int(excl_zone)
+    if zone < 0:
+        raise ValueError(f"excl_zone must be >= 0, got {excl_zone}")
+
+    starts = np.arange(0, m - window + 1, stride, dtype=np.int64)
+    nw = starts.shape[0]
+    c = default_chunk(m, window) if chunk is None else int(chunk)
+    cache = cache_mod.DEFAULT_CACHE if cache is None else cache
+    ref = jnp.asarray(series)
+    if ref_key is None and prune:
+        # Fingerprint once — every batch then shares the same
+        # (key, chunk) envelope entry without re-sampling the series.
+        ref_key = cache_mod.EnvelopeCache._fingerprint(ref)
+
+    acc = accum_dtype(ref.dtype)
+    nn_dist = np.full((nw,), big(acc), acc)
+    nn_start = np.full((nw,), -1, np.int64)
+    nn_end = np.full((nw,), -1, np.int64)
+    stats = [0, 0, 0, 0]
+    col = np.arange(window, dtype=np.int64)
+    for b0 in range(0, nw, batch):
+        sl = slice(b0, min(b0 + batch, nw))
+        s_b = starts[sl]
+        windows_b = series[s_b[:, None] + col[None, :]]
+        lo_b, hi_b = self_join_exclusion(s_b, window, zone)
+        res = search_topk(
+            windows_b, ref, 1, metric=metric, chunk=c, prune=prune,
+            span_cap=span_cap, excl_lo=lo_b, excl_hi=hi_b, cache=cache,
+            ref_key=ref_key, engine_impl=engine_impl)
+        nn_dist[sl] = np.asarray(res.distances)[:, 0]
+        nn_end[sl] = np.asarray(res.positions)[:, 0]
+        nn_start[sl] = np.asarray(res.starts)[:, 0]
+        stats[0] += res.chunks_total
+        stats[1] += res.chunks_pruned_kim
+        stats[2] += res.chunks_pruned_keogh
+        stats[3] += res.chunks_processed
+    return _assemble_profile(window, stride, k, starts, nn_dist, nn_start,
+                             nn_end, zone, c, stats)

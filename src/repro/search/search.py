@@ -23,6 +23,12 @@ Pruning semantics — two deviations from the exact streamed path:
     context — reported *starts* inherit the same bound (a start earlier
     than the halo window cannot be observed). Under the cap, the top-1
     *distance* is exactly ``engine.sdtw()``'s answer (bitwise for int32).
+    This caveat covers **profile mode** too: a pruned
+    ``repro.search.profile.matrix_profile`` runs every window batch
+    through this path, so a nearest neighbor aligned over more than
+    ``span_cap`` (default ``2 * window``) columns may be missed there —
+    ``matrix_profile(prune=False)`` (and the streaming
+    ``StreamProfile``, which is always exact) lift it.
   * **Greedy order**: surviving chunks are visited in bound order, not
     reference order, so for k > 1 the exclusion-zone suppression can
     resolve differently than the streamed path — the reported set beyond
@@ -235,7 +241,9 @@ def search_topk(queries, reference, k: int = 1, *, qlens=None,
       chunk:     pruning tile size (default: ``default_chunk``).
       prune:     apply the LB cascade; ``False`` = exact engine streaming.
       span_cap:  max alignment span (columns) the pruned path scores with
-                 full context; default ``2 * N``.
+                 full context; default ``2 * N`` (the same cap bounds a
+                 pruned ``matrix_profile``'s nearest neighbors — see the
+                 module docstring).
       excl_zone: suppression radius between reported matches (default:
                  half of each query's true length — or 0 with
                  ``excl_mode='span'``).

@@ -5,13 +5,17 @@ advancing every query's DP carry through the same rowscan / Pallas chunk
 paths the offline engine runs — distances, spans and top-K matches are
 bitwise-identical to ``engine.sdtw`` for any feed partition.
 ``ShardedStreamSession`` feeds per-device chunk streams through the
-ppermute systolic carry. ``engine.stream()`` is the front door.
+ppermute systolic carry. ``engine.stream()`` is the front door. ``StreamProfile`` is the
+incremental matrix profile: each fed sample extends the reference
+*and* admits new self-join windows.
 """
+from .profile import StreamProfile
 from .session import (DEFAULT_STREAM_CHUNK, AlertEvent, StreamResult,
                       StreamSession)
 from .sharded import ShardedStreamSession
 
 __all__ = [
     "StreamSession", "ShardedStreamSession", "StreamResult", "AlertEvent",
+    "StreamProfile",
     "DEFAULT_STREAM_CHUNK",
 ]

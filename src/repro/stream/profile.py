@@ -1,0 +1,317 @@
+"""Incremental matrix profile: the self-join that grows with the stream.
+
+``StreamProfile`` is the online counterpart of
+``repro.search.profile.matrix_profile``: reference samples arrive through
+``feed()``, and each arrival plays *both* self-join roles —
+
+  * it **extends the reference**: every already-admitted window's
+    nearest-neighbor heap advances over the new samples through the same
+    per-tile ``sdtw_chunk_batch_topk`` step the offline chunked engine
+    and ``StreamSession`` run (``_heap_step``), so only the affected
+    profile entries move — windows whose heaps the new tile cannot
+    improve are untouched by the fold;
+  * it **admits new query windows**: once the stream covers samples
+    ``[s, s + window)``, the window starting at ``s`` joins the batch.
+    A fresh window must scan the *entire* history (a motif's other half
+    may lie arbitrarily far in the past), so admissions replay the
+    recorded tile sequence for the new rows only — existing rows never
+    recompute.
+
+Exactness: the per-window nearest neighbor is a top-1 heap, and the
+streamed top-1 is exact under *any* feed partition (see ``repro.core.
+topk``) — so ``results()`` is int32-bitwise-equal to
+``matrix_profile(series_so_far, ..., prune=False)`` regardless of how
+the stream was sliced or how often ``flush()`` was called (no k>1
+merge-boundary caveat can arise: the motif/discord ``k`` is a host-side
+reduction over the finished profile, not a streamed heap).
+
+Costs, for T processed tiles and nw admitted windows: state is
+O(nw · window) carries + O(M) sample history (kept for admissions);
+admission catch-up replays O(T) tiles per admission event, O(T²) tile
+steps over the stream's lifetime in the worst case (stride=1, tiny
+chunk). For long streams pick ``stride`` (admissions per tile drop) and
+a large ``chunk``; or run the offline ``matrix_profile`` which batches
+all windows. The window batch is capacity-padded to powers of two
+(amortized-doubling), so the jitted tile step compiles O(log nw) times;
+padding rows carry a fully-banned exclusion range and stay at the
+``(BIG, -1, -1)`` heap sentinel, masked like any invalid window.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import INT_FAR, accum_dtype
+from repro.core.sdtw import sdtw_carry_init, self_join_exclusion
+from repro.core.topk import topk_init
+from repro.search.profile import ProfileResult, _assemble_profile
+from repro.stream.session import DEFAULT_STREAM_CHUNK, _heap_step
+
+#: Smallest capacity of the admitted-window batch (power-of-two growth).
+MIN_CAPACITY = 16
+
+
+class StreamProfile:
+    """Online sDTW matrix profile of an unbounded, growing series.
+
+    ``feed(samples)`` appends to the series; ``results()`` returns the
+    current ``ProfileResult`` (non-destructive — includes the buffered
+    tail without disturbing tile alignment); ``flush()`` pushes the tail
+    through destructively (exact: the top-1 heaps are partition-
+    invariant, so flushing never changes what ``results()`` reports).
+    """
+
+    def __init__(self, window: int, stride: int = 1, k: int = 1, *,
+                 metric: str = "abs_diff", chunk: Optional[int] = None,
+                 excl_zone: Optional[int] = None):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.window = int(window)
+        self.stride = int(stride)
+        self.k = int(k)
+        self.metric = metric
+        self.chunk = int(DEFAULT_STREAM_CHUNK if chunk is None else chunk)
+        self.zone = window // 2 if excl_zone is None else int(excl_zone)
+        if self.zone < 0:
+            raise ValueError(f"excl_zone must be >= 0, got {excl_zone}")
+
+        self._dtype = None            # pinned by the first feed
+        self._buf = np.zeros((0,), np.int32)
+        self._offset = 0              # samples advanced through the DP
+        # Processed-tile record for admission catch-up: (padded tile,
+        # true length, global start). Replayed verbatim so a late window
+        # sees exactly the tile partition the live batch saw.
+        self._tiles: List[Tuple[np.ndarray, int, int]] = []
+        self._hist = np.zeros((0,), np.int32)   # amortized-doubling
+        self._hist_len = 0
+        self.tiles_processed = 0
+
+        self._n = 0                   # admitted windows
+        self._cap = 0
+        self._q = None                # (cap, window) np window slab
+        self._lo = self._hi = None    # (cap,) banned ranges (np)
+        self._carry = None            # jnp (bcol, bstart, best, heap...)
+
+    # ------------------------------------------------------------------
+    # feeding
+    # ------------------------------------------------------------------
+
+    @property
+    def samples_seen(self) -> int:
+        """Samples fed so far (including the buffered tail)."""
+        return self._offset + int(self._buf.shape[0])
+
+    @property
+    def windows_admitted(self) -> int:
+        return self._n
+
+    def feed(self, data) -> "StreamProfile":
+        """Append series samples; advance the DP by every whole tile."""
+        data = np.asarray(data)
+        if data.ndim != 1:
+            raise ValueError(f"feed() takes a 1-D chunk, got shape "
+                             f"{data.shape}")
+        if data.shape[0] == 0:
+            return self
+        if self._dtype is None:
+            self._dtype = data.dtype
+            self._buf = np.zeros((0,), data.dtype)
+            self._hist = np.zeros((self.chunk,), data.dtype)
+        elif data.dtype != self._dtype:
+            raise ValueError(f"stream dtype changed mid-flight: "
+                             f"{self._dtype} -> {data.dtype}")
+        self._buf = np.concatenate([self._buf, data])
+        while self._buf.shape[0] >= self.chunk:
+            tile, self._buf = (self._buf[:self.chunk],
+                               self._buf[self.chunk:])
+            self._advance(tile, self.chunk)
+        return self
+
+    def flush(self) -> "StreamProfile":
+        """Destructively push the buffered tail through the DP. Exact —
+        top-1 heaps are feed-partition-invariant — and the session keeps
+        streaming (the recorded partial tile replays with its true
+        length for every later admission)."""
+        if self._buf.shape[0]:
+            tail, self._buf = self._buf, self._buf[:0]
+            padded = np.zeros((self.chunk,), tail.dtype)
+            padded[:tail.shape[0]] = tail
+            self._advance(padded, int(tail.shape[0]))
+        return self
+
+    def _advance(self, tile_np: np.ndarray, clen: int):
+        """One (possibly right-padded) tile: extend the reference for the
+        admitted batch, then admit windows the tile completed."""
+        j0 = self._offset
+        if self._hist_len + clen > self._hist.shape[0]:
+            grown = np.zeros((max(self._hist.shape[0] * 2,
+                                  self._hist_len + clen),), self._hist.dtype)
+            grown[:self._hist_len] = self._hist[:self._hist_len]
+            self._hist = grown
+        self._hist[self._hist_len:self._hist_len + clen] = tile_np[:clen]
+        self._hist_len += clen
+        self._tiles.append((np.asarray(tile_np), clen, j0))
+        if self._n:
+            self._carry = self._step(self._q, self._lo, self._hi,
+                                     self._carry, tile_np, clen, j0)
+        self.tiles_processed += 1
+        self._offset += clen
+        self._admit()
+
+    def _step(self, q, lo, hi, carry, tile_np, clen: int, j0: int):
+        """One jitted tile step over a capacity-padded batch."""
+        cap = q.shape[0]
+        return _heap_step(
+            jnp.asarray(q), jnp.asarray(tile_np),
+            jnp.full((cap,), self.window, jnp.int32), carry,
+            jnp.int32(j0), jnp.int32(j0 + clen), jnp.int32(clen),
+            jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
+            jnp.zeros((cap,), jnp.int32), metric=self.metric, k=1,
+            excl_span=False, track=True, lastrow=False)[0]
+
+    # ------------------------------------------------------------------
+    # window admission
+    # ------------------------------------------------------------------
+
+    def _pending_starts(self, covered: int) -> np.ndarray:
+        """Starts of windows fully contained in ``covered`` samples but
+        not yet admitted."""
+        first = self._n * self.stride
+        last = covered - self.window          # inclusive bound on starts
+        if last < first:
+            return np.zeros((0,), np.int64)
+        return np.arange(first, last + 1, self.stride, dtype=np.int64)
+
+    def _banned_rows(self, cap: int, starts: np.ndarray):
+        """(lo, hi) slabs: real rows get the sample-unit trivial-match
+        band, padding rows ban every column (their heaps stay sentinel)."""
+        lo = np.zeros((cap,), np.int32)
+        hi = np.full((cap,), INT_FAR, np.int32)
+        if starts.size:
+            rlo, rhi = self_join_exclusion(starts, self.window, self.zone)
+            lo[:starts.size] = np.asarray(rlo)
+            hi[:starts.size] = np.asarray(rhi)
+        return lo, hi
+
+    def _window_slab(self, cap: int, starts: np.ndarray,
+                     hist: Optional[np.ndarray] = None) -> np.ndarray:
+        if hist is None:
+            hist = self._hist[:self._hist_len]
+        q = np.zeros((cap, self.window), self._dtype)
+        col = np.arange(self.window, dtype=np.int64)
+        if starts.size:
+            q[:starts.size] = hist[starts[:, None] + col[None, :]]
+        return q
+
+    def _fresh_carry(self, cap: int):
+        acc = accum_dtype(self._dtype)
+        return (sdtw_carry_init(cap, self.window, acc, track_start=True)
+                + topk_init(cap, 1, acc))
+
+    def _catchup(self, starts: np.ndarray, tiles, hist=None):
+        """Replay the recorded tile sequence for a batch of fresh
+        windows; returns the finished capacity-padded carry (rows
+        ``[0, len(starts))`` are the real ones)."""
+        cap = max(MIN_CAPACITY, 1 << max(0, int(starts.size) - 1)
+                  .bit_length())
+        q = self._window_slab(cap, starts, hist)
+        lo, hi = self._banned_rows(cap, starts)
+        carry = self._fresh_carry(cap)
+        for tile_np, clen, j0 in tiles:
+            carry = self._step(q, lo, hi, carry, tile_np, clen, j0)
+        return carry
+
+    def _grow(self, need: int):
+        """Double the admitted batch's capacity to hold ``need`` rows,
+        padding every carry leaf with its fresh-init value."""
+        new_cap = MIN_CAPACITY
+        while new_cap < need:
+            new_cap *= 2
+        if new_cap == self._cap:
+            return
+        starts = np.arange(self._n, dtype=np.int64) * self.stride
+        q = self._window_slab(new_cap, starts)
+        lo, hi = self._banned_rows(new_cap, starts)
+        fresh = self._fresh_carry(new_cap)
+        if self._carry is None:
+            carry = fresh
+        else:
+            carry = tuple(f.at[:self._cap].set(c)
+                          for f, c in zip(fresh, self._carry))
+        self._q, self._lo, self._hi, self._carry = q, lo, hi, carry
+        self._cap = new_cap
+
+    def _admit(self):
+        starts = self._pending_starts(self._offset)
+        if not starts.size:
+            return
+        caught = self._catchup(starts, self._tiles)
+        self._grow(self._n + starts.size)
+        lo, hi = self_join_exclusion(starts, self.window, self.zone)
+        sl = slice(self._n, self._n + starts.size)
+        col = np.arange(self.window, dtype=np.int64)
+        self._q[sl] = self._hist[:self._hist_len][
+            starts[:, None] + col[None, :]]
+        self._lo[sl] = np.asarray(lo)
+        self._hi[sl] = np.asarray(hi)
+        self._carry = tuple(
+            main.at[sl].set(new[:starts.size])
+            for main, new in zip(self._carry, caught))
+        self._n += int(starts.size)
+
+    # ------------------------------------------------------------------
+    # results
+    # ------------------------------------------------------------------
+
+    def results(self) -> ProfileResult:
+        """The profile over everything fed so far — non-destructive: the
+        buffered tail is applied to a *copy* of the carries (and windows
+        it completes are caught up on the side), so polling never
+        perturbs the live session's tile alignment."""
+        tiles = list(self._tiles)
+        carry = self._carry
+        tail = self._buf
+        if tail.shape[0]:
+            padded = np.zeros((self.chunk,), tail.dtype)
+            padded[:tail.shape[0]] = tail
+            tiles.append((padded, int(tail.shape[0]), self._offset))
+            if self._n:
+                carry = self._step(self._q, self._lo, self._hi, carry,
+                                   padded, int(tail.shape[0]),
+                                   self._offset)
+        n_live = self._n
+        rows_d: List[np.ndarray] = []
+        rows_p: List[np.ndarray] = []
+        rows_s: List[np.ndarray] = []
+        if n_live:
+            rows_d.append(np.asarray(carry[3])[:n_live, 0])
+            rows_p.append(np.asarray(carry[4])[:n_live, 0])
+            rows_s.append(np.asarray(carry[5])[:n_live, 0])
+        pending = self._pending_starts(self.samples_seen)
+        if pending.size:
+            hist = np.concatenate([self._hist[:self._hist_len], self._buf])
+            caught = self._catchup(pending, tiles, hist)
+            rows_d.append(np.asarray(caught[3])[:pending.size, 0])
+            rows_p.append(np.asarray(caught[4])[:pending.size, 0])
+            rows_s.append(np.asarray(caught[5])[:pending.size, 0])
+        nw = n_live + int(pending.size)
+        acc = accum_dtype(self._dtype if self._dtype is not None
+                          else np.int32)
+        if nw:
+            nn_d = np.concatenate(rows_d)
+            nn_p = np.concatenate(rows_p).astype(np.int64)
+            nn_s = np.concatenate(rows_s).astype(np.int64)
+        else:
+            nn_d = np.zeros((0,), acc)
+            nn_p = nn_s = np.zeros((0,), np.int64)
+        starts = np.arange(nw, dtype=np.int64) * self.stride
+        t = self.tiles_processed + (1 if tail.shape[0] else 0)
+        return _assemble_profile(self.window, self.stride, self.k, starts,
+                                 nn_d, nn_s, nn_p, self.zone, self.chunk,
+                                 (t, 0, 0, t))

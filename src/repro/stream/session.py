@@ -62,15 +62,22 @@ Exactness notes: distances, spans and the top-1 match are exact for every
 feed partition and any interleaving of ``flush()`` calls. The k > 1 heap
 inherits the documented greedy-merge semantics of the offline chunked
 path: it is bitwise-reproducible for a given tile size and equals the
-offline heap when tile boundaries match (they do, unless ``flush()`` is
-called mid-stream — then merge boundaries shift, as if the offline call
-had used a different chunking).
+offline heap when tile boundaries match. A **mid-stream** ``flush()``
+(exact mode, then feeding continues) shifts every later tile boundary,
+as if the offline call had used a different chunking — the k > 1 heap
+beyond top-1 may then legitimately differ from the aligned-boundary
+result, so the first ``feed()`` after such a flush on a k > 1 session
+raises a loud ``RuntimeWarning`` (``results()`` polls the tail without
+moving boundaries and never warns; k = 1 / span / plain sessions stay
+exact and stay silent). Pruned-mode flushes are terminal and cannot
+shift anything.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import json
+import warnings
 from typing import Callable, List, Optional
 
 import jax
@@ -327,6 +334,7 @@ class StreamSession:
         self._buf = np.zeros((0,), np.int32)
         self._offset = 0             # samples advanced through the DP
         self._finalized = False
+        self._flush_shift_pending = False   # mid-stream flush happened
         self._ring: List[np.ndarray] = []   # pruned mode: last halo tiles
         self._env_tail: List[tuple] = []    # pruned mode: trailing envelopes
         # Full streamed envelope (accumulator dtype, one entry per tile) —
@@ -417,6 +425,17 @@ class StreamSession:
                              f"{data.shape}")
         if data.shape[0] == 0:
             return self
+        if self._flush_shift_pending:
+            self._flush_shift_pending = False
+            if self.top_k is not None and self._k > 1:
+                warnings.warn(
+                    "feeding a k>1 session after a mid-stream flush(): the "
+                    "partial tile shifted every later merge boundary, so "
+                    "heap entries beyond top-1 may differ from an "
+                    "aligned-boundary (offline or unflushed) run — the "
+                    "top-1 distance/span stays exact. Poll results() "
+                    "instead of flush() to read the tail without moving "
+                    "boundaries.", RuntimeWarning, stacklevel=2)
         if self._dtype is None:
             self._dtype = data.dtype
             self._buf = np.zeros((0,), data.dtype)
@@ -448,6 +467,11 @@ class StreamSession:
             self._advance(padded, int(tail.shape[0]))
             if self.prune:
                 self._finalized = True
+            elif tail.shape[0] % self.chunk:
+                # Exact mode keeps streaming, but the partial tile moved
+                # every later tile boundary — the next feed() warns when
+                # a k>1 heap rides this session (see module docstring).
+                self._flush_shift_pending = True
         return self
 
     def _advance(self, tile_np: np.ndarray, clen: int):
@@ -700,6 +724,7 @@ class StreamSession:
                                                               type(None)))
             else None,
             offset=self._offset, finalized=self._finalized,
+            flush_shift=self._flush_shift_pending,
             block_q=self.block_q, block_m=self.block_m,
             dtype=None if self._dtype is None else np.dtype(
                 self._dtype).name,
@@ -768,6 +793,7 @@ class StreamSession:
         self._ragged = meta["ragged"]
         self._offset = meta["offset"]
         self._finalized = meta["finalized"]
+        self._flush_shift_pending = meta.get("flush_shift", False)
         self._dtype = (None if meta["dtype"] is None
                        else np.dtype(meta["dtype"]))
         (self.tiles_total, self.tiles_pruned_kim, self.tiles_pruned_keogh,

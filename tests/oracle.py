@@ -50,9 +50,16 @@ def _dist(q, r, metric: str):
     raise ValueError(f"unknown metric {metric!r}")
 
 
-def sdtw_span_matrix(query, reference, metric: str = "abs_diff"):
+def sdtw_span_matrix(query, reference, metric: str = "abs_diff",
+                     excl_lo=None, excl_hi=None):
     """Full (values, starts) DP: S is the float64 scoring matrix, T[i, j]
-    the smallest row-0 column among the minimum-cost paths into (i, j)."""
+    the smallest row-0 column among the minimum-cost paths into (i, j).
+
+    ``excl_lo``/``excl_hi`` ban the half-open reference column range
+    ``[excl_lo, excl_hi)`` — banned columns cost inf, exactly the
+    engine's per-query exclusion mask (which puts BIG in the distance
+    row); a last-row value ≥ INT_BIG / inf therefore means "no
+    admissible alignment ends here" on both sides of a differential."""
     q = np.asarray(query, np.float64)
     r = np.asarray(reference, np.float64)
     n, m = len(q), len(r)
@@ -60,8 +67,42 @@ def sdtw_span_matrix(query, reference, metric: str = "abs_diff"):
     T = np.zeros((n, m), np.int64)
     S[0] = _dist(q[0], r, metric)
     T[0] = np.arange(m)
+    if excl_lo is not None or excl_hi is not None:
+        lo = 0 if excl_lo is None else int(excl_lo)
+        hi = 0 if excl_hi is None else int(excl_hi)
+        banned = np.zeros((m,), bool)
+        banned[max(0, lo):max(0, min(hi, m))] = True
+        return _span_matrix_banned(q, r, metric, banned)
     for i in range(1, n):
         di = _dist(q[i], r, metric)
+        S[i, 0] = S[i - 1, 0] + di[0]
+        T[i, 0] = T[i - 1, 0]
+        for j in range(1, m):
+            preds = ((S[i - 1, j - 1], T[i - 1, j - 1]),
+                     (S[i, j - 1], T[i, j - 1]),
+                     (S[i - 1, j], T[i - 1, j]))
+            v = min(p[0] for p in preds)
+            s = min(p[1] for p in preds if p[0] == v)
+            S[i, j] = di[j] + v
+            T[i, j] = s
+    return S, T
+
+
+def _span_matrix_banned(q, r, metric, banned):
+    """The banned-columns variant of ``sdtw_span_matrix``: a banned
+    column's distance row is inf, so no admissible path touches it (inf
+    propagates); start pointers follow the same smallest-start rule with
+    inf cells keeping a harmless sentinel."""
+    n, m = len(q), len(r)
+    S = np.zeros((n, m))
+    T = np.zeros((n, m), np.int64)
+    d0 = _dist(q[0], r, metric)
+    d0[banned] = np.inf
+    S[0] = d0
+    T[0] = np.arange(m)
+    for i in range(1, n):
+        di = _dist(q[i], r, metric)
+        di[banned] = np.inf
         S[i, 0] = S[i - 1, 0] + di[0]
         T[i, 0] = T[i - 1, 0]
         for j in range(1, m):

@@ -1,0 +1,423 @@
+"""The matrix profile: batch and streaming self-joins against the
+banned-column brute-force oracle (bitwise), the stride exclusion-unit
+regression, sentinel-leak guards, and motif/discord selection
+invariants. Hypothesis variants of the property sweeps run when the
+library is installed; the seeded manual sweeps below cover the same
+properties unconditionally."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracle import sdtw_span_matrix
+
+from repro.core.distances import big
+from repro.core.matsa_api import matsa
+from repro.search import search_topk
+from repro.search.profile import matrix_profile
+from repro.stream import StreamProfile
+
+
+# ---------------------------------------------------------------------------
+# Oracle: per-window nearest neighbor under banned reference columns
+# ---------------------------------------------------------------------------
+
+def oracle_profile(series, window, stride=1, zone=None, metric="abs_diff",
+                   return_rows=False):
+    """Brute-force matrix profile: one full banned-column DP per window.
+    Returns (starts, dist, start, end) float64/int64 arrays with
+    (inf, -1, -1) rows where the exclusion band admits nothing; with
+    ``return_rows`` also the per-window (last row, start lane) pairs."""
+    series = np.asarray(series)
+    m = len(series)
+    z = window // 2 if zone is None else zone
+    starts = np.arange(0, m - window + 1, stride, dtype=np.int64)
+    dist = np.full(starts.shape, np.inf)
+    nn_s = np.full(starts.shape, -1, np.int64)
+    nn_e = np.full(starts.shape, -1, np.int64)
+    rows = []
+    for i, s in enumerate(starts):
+        q = series[s:s + window]
+        S, T = sdtw_span_matrix(q, series, metric,
+                                excl_lo=max(int(s) - z, 0),
+                                excl_hi=int(s) + window + z)
+        row = S[-1]
+        rows.append((row, T[-1]))
+        j = int(np.argmin(row))
+        if np.isfinite(row[j]):
+            dist[i], nn_s[i], nn_e[i] = row[j], int(T[-1, j]), j
+    if return_rows:
+        return starts, dist, nn_s, nn_e, rows
+    return starts, dist, nn_s, nn_e
+
+
+def assert_profile_matches_oracle(prof, series, metric="abs_diff",
+                                  exact_spans=True):
+    """Valid mask and distances bitwise against oracle_profile; spans
+    bitwise when ``exact_spans`` (the unpruned contract: leftmost-argmin
+    end, smallest-start tie-break), otherwise verified as *an* optimal
+    witness — pruning is admissible on distances but may skip a chunk
+    that only ties the incumbent, so an equally-optimal later span can
+    win."""
+    starts, dist, nn_s, nn_e, rows = oracle_profile(
+        series, prof.window, prof.stride, prof.excl_zone, metric,
+        return_rows=True)
+    np.testing.assert_array_equal(prof.starts, starts)
+    np.testing.assert_array_equal(prof.valid, np.isfinite(dist))
+    v = prof.valid
+    np.testing.assert_array_equal(prof.nn_dist[v].astype(np.float64),
+                                  dist[v])
+    if exact_spans:
+        np.testing.assert_array_equal(prof.nn_start, nn_s)
+        np.testing.assert_array_equal(prof.nn_end, nn_e)
+    else:
+        for i in np.flatnonzero(v):
+            row, tlast = rows[i]
+            e = prof.nn_end[i]
+            assert row[e] == dist[i], (i, e)
+            assert tlast[e] == prof.nn_start[i], (i, e)
+
+
+# ---------------------------------------------------------------------------
+# Batch profile vs oracle (the acceptance differential)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 3, 5])
+@pytest.mark.parametrize("prune", [False, True])
+def test_profile_vs_oracle_bitwise(stride, prune, rng):
+    """Every per-window (distance, start, end) bitwise-equal to the
+    brute-force banned-column DP — pruned and exact, across strides."""
+    series = rng.integers(-30, 30, 97).astype(np.int32)
+    prof = matrix_profile(series, 8, stride=stride, prune=prune,
+                          chunk=16, batch=7)
+    assert_profile_matches_oracle(prof, series, exact_spans=not prune)
+
+
+def test_profile_square_diff_and_default_zone(rng):
+    series = rng.integers(-9, 9, 64).astype(np.int32)
+    prof = matrix_profile(series, 6, metric="square_diff", prune=False,
+                          chunk=16)
+    assert prof.excl_zone == 3
+    assert_profile_matches_oracle(prof, series, metric="square_diff")
+
+
+def test_profile_custom_zone_vs_oracle(rng):
+    """A wider explicit zone changes which neighbors are admissible —
+    the profile must track the oracle's banned band exactly."""
+    series = rng.integers(-20, 20, 80).astype(np.int32)
+    prof = matrix_profile(series, 8, excl_zone=11, prune=False, chunk=16)
+    assert_profile_matches_oracle(prof, series)
+
+
+def test_profile_batch_size_invariant(rng):
+    """The batch knob is memory-only. Unpruned, batch=3 and batch=1000
+    agree bitwise on everything; pruned, distances still agree bitwise
+    but the witness span may differ on exact ties (batchmates decide
+    which tying chunks get dispatched at all)."""
+    series = rng.integers(-30, 30, 90).astype(np.int32)
+    for prune in (False, True):
+        small = matrix_profile(series, 8, prune=prune, chunk=16, batch=3)
+        huge = matrix_profile(series, 8, prune=prune, chunk=16,
+                              batch=1000)
+        np.testing.assert_array_equal(small.nn_dist, huge.nn_dist)
+        if not prune:
+            np.testing.assert_array_equal(small.nn_start, huge.nn_start)
+            np.testing.assert_array_equal(small.nn_end, huge.nn_end)
+
+
+def test_profile_validates_args():
+    s = np.zeros(32, np.int32)
+    with pytest.raises(ValueError, match="1-D"):
+        matrix_profile(s.reshape(4, 8), 4)
+    with pytest.raises(ValueError, match="window"):
+        matrix_profile(s, 33)
+    with pytest.raises(ValueError, match="stride"):
+        matrix_profile(s, 4, stride=0)
+    with pytest.raises(ValueError, match="k must"):
+        matrix_profile(s, 4, k=0)
+    with pytest.raises(ValueError, match="batch"):
+        matrix_profile(s, 4, batch=0)
+    with pytest.raises(ValueError, match="excl_zone"):
+        matrix_profile(s, 4, excl_zone=-1)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: matsa self-join exclusion stays in sample units at stride > 1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 3, 5, 8])
+def test_matsa_self_join_stride_exclusion_units(stride, rng):
+    """The trivial-match band is [s - w//2, s + w + w//2) in *samples*
+    regardless of stride — both the profile-routed default and the
+    legacy engine path must match the oracle for every stride (a
+    window-unit bug would widen or shrink the band as stride grows)."""
+    series = rng.integers(-25, 25, 73).astype(np.int32)
+    w = 8
+    starts, dist, _, _ = oracle_profile(series, w, stride)
+    finite = np.where(np.isfinite(dist), dist, None)
+
+    routed = matsa(series, mode="self_join", window=w, stride=stride)
+    assert routed.profile is not None
+    np.testing.assert_array_equal(np.asarray(routed.window_starts), starts)
+    d = np.asarray(routed.distances).astype(np.float64)
+    for i, want in enumerate(finite):
+        if want is not None:
+            assert d[i] == want, (stride, i)
+
+    legacy = matsa(series, mode="self_join", window=w, stride=stride,
+                   impl="chunked", chunk=16)
+    assert legacy.profile is None
+    dl = np.asarray(legacy.distances).astype(np.float64)
+    for i, want in enumerate(finite):
+        if want is not None:
+            assert dl[i] == want, (stride, i)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: sentinel padding never leaks
+# ---------------------------------------------------------------------------
+
+def test_search_topk_padding_exact_when_k_exceeds_matches(rng):
+    """k greater than the number of admissible chunks' distinct matches:
+    the spare heap slots must come back as the exact (BIG, -1, -1)
+    padding triple — not garbage, not duplicates."""
+    q = rng.integers(-10, 10, (2, 6)).astype(np.int32)
+    r = rng.integers(-10, 10, 20).astype(np.int32)
+    res = search_topk(jnp.asarray(q), jnp.asarray(r), k=8, chunk=16,
+                      prune=False, excl_zone=50)  # one pick suppresses all
+    d = np.asarray(res.distances)
+    p = np.asarray(res.positions)
+    s = np.asarray(res.starts)
+    ceiling = big(d.dtype)
+    assert (d[:, 1:] == ceiling).all()
+    assert (p[:, 1:] == -1).all()
+    assert (s[:, 1:] == -1).all()
+    assert (d[:, 0] < ceiling).all() and (p[:, 0] >= 0).all()
+
+
+def test_profile_fully_banned_windows_masked():
+    """m=14, w=8, zone=4: windows starting at 2, 3, 4 ban every
+    reference column. They must come back invalid with canonical
+    (-1, -1, -1) span padding and never be chosen as motif or discord."""
+    series = (np.arange(14, dtype=np.int32) % 5) * 3
+    prof = matrix_profile(series, 8, excl_zone=4, prune=False, chunk=16,
+                          k=4)
+    want_valid = np.array([True, True, False, False, False, True, True])
+    np.testing.assert_array_equal(prof.valid, want_valid)
+    inv = ~prof.valid
+    assert (prof.nn_start[inv] == -1).all()
+    assert (prof.nn_end[inv] == -1).all()
+    assert (prof.nn_window[inv] == -1).all()
+    assert (prof.nn_dist[inv] == big(prof.nn_dist.dtype)).all()
+    banned = set(np.flatnonzero(inv))
+    for a, b, _ in prof.motifs:
+        assert a not in banned and b not in banned
+    for i, d in prof.discords:
+        assert i not in banned
+        assert np.isfinite(d)
+    assert_profile_matches_oracle(prof, series)
+
+
+# ---------------------------------------------------------------------------
+# Motif / discord selection invariants (manual property sweep)
+# ---------------------------------------------------------------------------
+
+def _check_selection_invariants(prof):
+    """The documented motif/discord contracts, checkable on any result."""
+    dist_f = np.where(prof.valid, prof.nn_dist.astype(np.float64), np.inf)
+    motifs = prof.motifs
+    for a, b, d in motifs:
+        assert a < b
+        assert prof.nn_window[a] == b and prof.nn_window[b] == a
+        assert d == min(dist_f[a], dist_f[b])
+    assert [m[2] for m in motifs] == sorted(m[2] for m in motifs)
+    members = [s for a, b, _ in motifs
+               for s in (prof.starts[a], prof.starts[b])]
+    for i in range(len(members)):
+        for j in range(i + 1, len(members)):
+            assert abs(members[i] - members[j]) > prof.excl_zone
+
+    discords = prof.discords
+    for idx, d in discords:
+        assert prof.valid[idx] and np.isfinite(d)
+        assert d == dist_f[idx]
+    assert [d for _, d in discords] == sorted(
+        (d for _, d in discords), reverse=True)
+    picks = [prof.starts[i] for i, _ in discords]
+    for i in range(len(picks)):
+        for j in range(i + 1, len(picks)):
+            assert abs(picks[i] - picks[j]) > prof.excl_zone
+    if discords:
+        # The top discord is the global max over valid windows.
+        assert discords[0][1] == dist_f[prof.valid].max()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_motif_discord_invariants_sweep(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(40, 120))
+    w = int(rng.integers(4, 10))
+    stride = int(rng.integers(1, 4))
+    series = rng.integers(-15, 15, m).astype(np.int32)
+    prof = matrix_profile(series, w, stride=stride, k=3,
+                          prune=bool(seed % 2), chunk=16)
+    _check_selection_invariants(prof)
+
+
+def test_planted_motif_found():
+    """A planted repeated pattern far apart in noise must surface as the
+    top motif pair."""
+    rng = np.random.default_rng(7)
+    series = rng.integers(-40, 40, 120).astype(np.int32)
+    pat = np.array([5, -30, 30, -30, 30, 5, 17, -17], np.int32)
+    series[10:18] = pat
+    series[90:98] = pat
+    prof = matrix_profile(series, 8, k=2, prune=False, chunk=16)
+    assert prof.motifs, "no motif reported"
+    a, b, d = prof.motifs[0]
+    assert {prof.starts[a], prof.starts[b]} == {10, 90}
+    assert d == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Streaming differential: StreamProfile == matrix_profile, any partition
+# ---------------------------------------------------------------------------
+
+def _feed_partitioned(sp, series, cuts, flush_at=()):
+    edges = [0] + sorted(cuts) + [len(series)]
+    for i, (a, b) in enumerate(zip(edges[:-1], edges[1:])):
+        sp.feed(series[a:b])
+        if i in flush_at:
+            sp.flush()
+    return sp
+
+
+def assert_stream_equals_batch(sp, series, stride=1):
+    got = sp.results()
+    want = matrix_profile(series, sp.window, stride=stride, prune=False,
+                          chunk=sp.chunk, excl_zone=sp.zone, k=sp.k)
+    np.testing.assert_array_equal(got.nn_dist, want.nn_dist)
+    np.testing.assert_array_equal(got.nn_start, want.nn_start)
+    np.testing.assert_array_equal(got.nn_end, want.nn_end)
+    np.testing.assert_array_equal(got.starts, want.starts)
+    np.testing.assert_array_equal(got.motif_a, want.motif_a)
+    np.testing.assert_array_equal(got.motif_b, want.motif_b)
+    np.testing.assert_array_equal(got.discord_idx, want.discord_idx)
+
+
+@pytest.mark.parametrize("stride", [1, 4])
+def test_stream_profile_vs_batch_bitwise(stride, rng):
+    series = rng.integers(-20, 20, 101).astype(np.int32)
+    sp = StreamProfile(8, stride=stride, chunk=16, k=2)
+    sp.feed(series)
+    assert_stream_equals_batch(sp, series, stride)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_stream_profile_random_partitions(seed):
+    """Random feed partitions with random mid-stream flushes: the
+    streamed profile is partition-invariant and bitwise-equal to the
+    batch result (per-window heaps are top-1, hence exact)."""
+    rng = np.random.default_rng(100 + seed)
+    m = int(rng.integers(60, 140))
+    series = rng.integers(-25, 25, m).astype(np.int32)
+    ncuts = int(rng.integers(1, 6))
+    cuts = sorted(rng.choice(np.arange(1, m), ncuts, replace=False).tolist())
+    flush_at = set(rng.integers(0, ncuts + 1, 2).tolist())
+    sp = StreamProfile(8, chunk=16)
+    _feed_partitioned(sp, series, cuts, flush_at)
+    assert_stream_equals_batch(sp, series)
+
+
+def test_stream_profile_peek_is_stable(rng):
+    """results() twice in a row (with a buffered tail) gives identical
+    answers and does not disturb the subsequent stream."""
+    series = rng.integers(-20, 20, 77).astype(np.int32)
+    sp = StreamProfile(8, chunk=16)
+    sp.feed(series[:50])
+    a = sp.results()
+    b = sp.results()
+    np.testing.assert_array_equal(a.nn_dist, b.nn_dist)
+    np.testing.assert_array_equal(a.nn_end, b.nn_end)
+    sp.feed(series[50:])
+    assert_stream_equals_batch(sp, series)
+
+
+def test_stream_profile_vs_oracle(rng):
+    """End-to-end: streamed per-sample feeding against the brute-force
+    banned-column oracle."""
+    series = rng.integers(-15, 15, 59).astype(np.int32)
+    sp = StreamProfile(6, chunk=16)
+    for x in series:
+        sp.feed(np.asarray([x], np.int32))
+    assert_profile_matches_oracle(sp.results(), series)
+
+
+def test_stream_profile_validates():
+    sp = StreamProfile(4, chunk=16)
+    with pytest.raises(ValueError, match="1-D"):
+        sp.feed(np.zeros((2, 2), np.int32))
+    sp.feed(np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="dtype"):
+        sp.feed(np.zeros(4, np.float32))
+    with pytest.raises(ValueError, match="window"):
+        StreamProfile(0)
+    with pytest.raises(ValueError, match="stride"):
+        StreamProfile(4, stride=0)
+
+
+def test_stream_profile_empty_and_short():
+    """No samples / fewer than window samples: an empty but well-formed
+    profile (no windows, no motifs, no discords)."""
+    sp = StreamProfile(8, chunk=16)
+    res = sp.results()
+    assert res.starts.shape == (0,)
+    assert res.motifs == [] and res.discords == []
+    sp.feed(np.arange(5, dtype=np.int32))
+    assert sp.results().starts.shape == (0,)
+    assert sp.windows_admitted == 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variants (skipped when the library is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    import hypothesis.strategies as hyp_st
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    @hypothesis.given(
+        data=hyp_st.lists(hyp_st.integers(-30, 30), min_size=20,
+                          max_size=90),
+        window=hyp_st.integers(3, 9),
+        stride=hyp_st.integers(1, 4))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_hyp_profile_vs_oracle(data, window, stride):
+        series = np.asarray(data, np.int32)
+        hypothesis.assume(window <= len(series))
+        prof = matrix_profile(series, window, stride=stride, prune=False,
+                              chunk=16)
+        assert_profile_matches_oracle(prof, series)
+        _check_selection_invariants(prof)
+
+    @hypothesis.given(
+        data=hyp_st.lists(hyp_st.integers(-20, 20), min_size=24,
+                          max_size=80),
+        cuts=hyp_st.lists(hyp_st.integers(1, 79), max_size=4))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_hyp_stream_partition_invariance(data, cuts):
+        series = np.asarray(data, np.int32)
+        cuts = sorted({c for c in cuts if c < len(series)})
+        sp = StreamProfile(6, chunk=16)
+        _feed_partitioned(sp, series, cuts)
+        assert_stream_equals_batch(sp, series)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hyp_profile_vs_oracle():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hyp_stream_partition_invariance():
+        pass

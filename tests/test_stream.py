@@ -455,3 +455,87 @@ def test_golden_stream_bitwise():
                 got[key], want[key],
                 err_msg=f"golden drift in {key!r} — if intentional, "
                         "regenerate via tests/golden/make_golden.py")
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream flush on k>1 sessions: the boundary-shift caveat
+# ---------------------------------------------------------------------------
+
+# A pinned divergence witness: after a mid-stream flush at sample 2 every
+# later merge boundary shifts by 2, and the third heap entry lands on a
+# different (equal-distance) end than the aligned-boundary offline run —
+# while top-1 (and here top-2) stay exact. Found by searching random
+# int32 draws with a fold simulation over oracle last rows, then
+# verified on the real engine.
+FLUSH_SHIFT_Q = np.array([0, 4, 2, 2, 3, 1], np.int32)
+FLUSH_SHIFT_R = np.array(
+    [4, 0, 1, 1, 2, 2, 0, 0, 0, 0, 0, 4, 0, 3, 3, 1, 1, 2, 1, 4, 0, 4,
+     3, 4, 0, 1, 3, 2, 3, 3, 3, 0, 4, 2, 4, 1, 1, 4, 0, 0, 1, 3, 0, 4,
+     1, 1, 2, 4, 4, 4, 1, 0, 3, 3, 3, 0, 0, 2, 1, 2, 4, 1, 2, 1, 1],
+    np.int32)
+FLUSH_SHIFT_CUT = 2
+
+
+def _flushed_session(k):
+    s = stream(FLUSH_SHIFT_Q[None, :], chunk=16, top_k=k)
+    s.feed(FLUSH_SHIFT_R[:FLUSH_SHIFT_CUT])
+    s.flush()                               # partial tile: boundaries shift
+    return s
+
+
+def test_stream_midflush_k3_warns_and_diverges_beyond_top1():
+    """Feeding after a mid-stream flush on a k>1 session warns loudly,
+    top-1 stays bitwise-exact, and the pinned witness demonstrates the
+    caveat is real: an entry beyond top-1 differs from the offline run."""
+    offline = sdtw(jnp.asarray(FLUSH_SHIFT_Q[None, :]),
+                   jnp.asarray(FLUSH_SHIFT_R), impl="chunked", chunk=16,
+                   top_k=3)
+    off_d = np.asarray(offline[0])[0]
+    off_p = np.asarray(offline[1])[0]
+
+    s = _flushed_session(k=3)
+    with pytest.warns(RuntimeWarning, match="mid-stream flush"):
+        s.feed(FLUSH_SHIFT_R[FLUSH_SHIFT_CUT:])
+    res = s.results()
+    got_d = np.asarray(res.distances)[0]
+    got_p = np.asarray(res.positions)[0]
+
+    assert got_d[0] == off_d[0] and got_p[0] == off_p[0]   # top-1 exact
+    np.testing.assert_array_equal(got_d, off_d)  # distances agree here
+    assert not np.array_equal(got_p, off_p), \
+        "witness regressed: boundary shift no longer diverges — find a " \
+        "new pinned case before weakening the warning"
+
+
+def test_stream_midflush_warns_once_then_stays_quiet():
+    import warnings as _w
+    s = _flushed_session(k=2)
+    with pytest.warns(RuntimeWarning, match="mid-stream flush"):
+        s.feed(FLUSH_SHIFT_R[FLUSH_SHIFT_CUT:30])
+    with _w.catch_warnings():
+        _w.simplefilter("error")            # a second warning would raise
+        s.feed(FLUSH_SHIFT_R[30:])
+        s.results()
+
+
+def test_stream_midflush_k1_silent():
+    """k=1 (and aligned flushes) are exact under any partition — no
+    warning may fire."""
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        s = _flushed_session(k=1)
+        s.feed(FLUSH_SHIFT_R[FLUSH_SHIFT_CUT:])
+        s.results()
+        # aligned flush (buffer empty → no partial tile): still silent
+        s2 = stream(FLUSH_SHIFT_Q[None, :], chunk=16, top_k=2)
+        s2.feed(FLUSH_SHIFT_R[:32])
+        s2.flush()
+        s2.feed(FLUSH_SHIFT_R[32:])
+
+
+def test_stream_midflush_pending_survives_snapshot():
+    s = _flushed_session(k=2)
+    s2 = StreamSession.restore(s.snapshot())
+    with pytest.warns(RuntimeWarning, match="mid-stream flush"):
+        s2.feed(FLUSH_SHIFT_R[FLUSH_SHIFT_CUT:])
