@@ -106,7 +106,7 @@ def main(argv=None):
     from . import (common, endurance, fig09_latency_sweep, fig10_energy_sweep,
                    fig11_12_dataset_sweep, fig13_scaling, profile_bench,
                    roofline_table, sdtw_kernel_bench, search_bench,
-                   serve_bench, table6_speedups)
+                   serve_bench, table6_speedups, tuning_bench)
     mods = [
         ("fig09_latency_sweep", fig09_latency_sweep.main),
         ("fig10_energy_sweep", fig10_energy_sweep.main),
@@ -119,6 +119,7 @@ def main(argv=None):
         ("search_bench", lambda: search_bench.main(smoke=args.smoke)),
         ("profile_bench", lambda: profile_bench.main(smoke=args.smoke)),
         ("serve_bench", lambda: serve_bench.main(smoke=args.smoke)),
+        ("tuning_bench", lambda: tuning_bench.main(smoke=args.smoke)),
         ("roofline_table", roofline_table.main),
     ]
     if args.only:

@@ -1,0 +1,92 @@
+"""Tuned vs default: the autotuner's measured wins, with proof of safety.
+
+Each pair of rows runs the SAME computation twice — once with the legacy
+hand-tuned constants (``tune='off'``), once through the ``repro.tune``
+oracle (``tune='model'``, the engine default) — and the tuned row's
+derived field carries the two tokens CI gates on:
+
+  * ``tuned_vs_default=equal`` — the int32 results are bitwise identical
+    (tuning changes speed, never answers; ``DIFFERS`` fails the smoke
+    assertion),
+  * ``tuned_speedup=<ratio>`` — default µs / tuned µs (>1 means the
+    oracle beat the hand constants; the smoke gate only enforces a
+    generous noise floor, the real ranking validation is
+    ``repro.tune.validate`` against the committed baseline).
+
+Tuned rows also carry the dispatch ``decision`` token
+(``source:impl`` from ``engine.sdtw(..., explain=True)``) so the
+trajectory records *why* each configuration ran.
+
+Pairs: engine auto-dispatch (where the model picks the wavefront past
+the legacy ``M < 2N`` line), the pallas kernel's block shape, and (full
+mode only) the chunked path's tile size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, print_rows, time_call
+
+
+def _data(nq, n, m, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-100, 100, (nq, n)).astype(np.int32))
+    r = jnp.asarray(rng.integers(-100, 100, (m,)).astype(np.int32))
+    return q, r
+
+
+def _pair(rows, name, default_fn, tuned_fn, decision):
+    """Time both variants, assert bitwise equality, emit the row pair."""
+    a = np.asarray(default_fn())
+    b = np.asarray(tuned_fn())
+    equal = a.shape == b.shape and bool((a == b).all())
+    us_d = time_call(default_fn)
+    us_t = time_call(tuned_fn)
+    rows.append(emit(f"{name}_default", us_d))
+    rows.append(emit(
+        f"{name}_tuned", us_t,
+        f"tuned_vs_default={'equal' if equal else 'DIFFERS'};"
+        f"tuned_speedup={us_d / us_t:.2f}", decision=decision))
+
+
+def main(smoke: bool = False):
+    from repro.core.engine import sdtw
+    from repro.kernels.sdtw import sdtw_pallas
+
+    rows = []
+
+    # Engine auto-dispatch: legacy rules vs cost-model ranking.
+    nq, n, m = (4, 32, 1024) if smoke else (8, 64, 4096)
+    q, r = _data(nq, n, m)
+    _, dec = sdtw(q, r, explain=True)
+    _pair(rows, f"tuning_bench/dispatch_b{nq}_n{n}_m{m}",
+          lambda: sdtw(q, r, tune="off"),
+          lambda: sdtw(q, r),
+          dec.token())
+
+    # Pallas kernel block shape: legacy cover-the-reference tile vs the
+    # oracle's (table/model) block config.
+    nq, n, m = (2, 16, 2048) if smoke else (4, 32, 16384)
+    q, r = _data(nq, n, m, seed=1)
+    _, dec = sdtw(q, r, impl="pallas", explain=True)
+    _pair(rows, f"tuning_bench/pallas_blocks_b{nq}_n{n}_m{m}",
+          lambda: sdtw_pallas(q, r),
+          lambda: sdtw_pallas(q, r, tune="model"),
+          dec.token())
+
+    if not smoke:
+        # Chunked streaming tile size: DEFAULT_CHUNK vs the tuned chunk.
+        nq, n, m = 4, 32, 1 << 18
+        q, r = _data(nq, n, m, seed=2)
+        _, dec = sdtw(q, r, explain=True)
+        _pair(rows, f"tuning_bench/chunk_b{nq}_n{n}_m{m}",
+              lambda: sdtw(q, r, tune="off"),
+              lambda: sdtw(q, r),
+              dec.token())
+
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(main())

@@ -26,6 +26,15 @@ Dispatch rules (``impl="auto"``):
      depth N+M-1 ≈ cheap; avoids the associative-scan constant).
   6. otherwise                                     → rowscan.
 
+Rules 1–4 are *structural* (hard constraints); rules 5–6 are the legacy
+``tune='off'`` heuristics.  Under the engine default ``tune='model'`` the
+in-core choice comes from the ``repro.tune`` cost-model ranking (or a
+tuning-table hit) instead — on measured CPU shapes that picks the
+wavefront well beyond the ``M < 2N`` line — and the chunked / sharded /
+pallas paths take their ``chunk`` / ``n_micro`` / block shapes from the
+same oracle.  ``sdtw(..., explain=True)`` returns the
+``repro.tune.DispatchDecision`` explaining what won and why.
+
 ``impl=`` is an escape hatch that forces any of the five paths. Forcing a
 path makes argument precedence *explicit*: arguments that belong to a
 different path are rejected instead of silently ignored —
@@ -108,29 +117,67 @@ MIN_BUCKET = 16             # smallest ragged-batch padded length
 PALLAS_FUSED_MAX = 1 << 22
 
 
-def choose_impl(nq: int, n: int, m: int, *, backend: Optional[str] = None,
-                mesh=None, chunk: Optional[int] = None,
-                has_exclusion: bool = False,
-                top_k: Optional[int] = None) -> str:
-    """The ``impl="auto"`` dispatch rule (documented in the module docstring,
-    exercised directly by the tests)."""
+def choose_impl_explained(nq: int, n: int, m: int, *,
+                          backend: Optional[str] = None, mesh=None,
+                          chunk: Optional[int] = None,
+                          has_exclusion: bool = False,
+                          top_k: Optional[int] = None, tune: str = "off",
+                          metric: str = "abs_diff",
+                          dtype: str = "int32") -> tuple:
+    """``choose_impl`` with its reasoning: ``(impl, source, reason,
+    candidates)`` where ``source``/``candidates`` follow
+    ``repro.tune.DispatchDecision``.  The structural rules (mesh / top-K /
+    explicit chunk / TPU / memory bound) are hard constraints and fire
+    before any scoring; with ``tune != 'off'`` the remaining in-core
+    choice (wavefront vs rowscan) comes from the cost-model ranking (or a
+    tuning-table hit) instead of the legacy ``M < 2N`` rule."""
     if mesh is not None:
-        return "sharded"
+        return ("sharded", "structural",
+                "mesh shards the reference axis", ())
     if top_k is not None:
         # The top-K heap rides the chunk boundary carry — streaming path.
-        return "chunked"
+        return ("chunked", "structural",
+                "top-K heap rides the chunk boundary carry", ())
     if chunk is not None:
-        return "chunked"
+        return ("chunked", "structural",
+                "explicit chunk forces streaming", ())
     backend = jax.default_backend() if backend is None else backend
     if backend == "tpu" and not has_exclusion:
         # The Pallas kernel streams arbitrary M through its own tile grid —
         # long references stay on the kernel path on the target hardware.
-        return "pallas"
+        return ("pallas", "structural",
+                "TPU backend (kernel grid streams any M)", ())
     if m >= CHUNK_THRESHOLD:
-        return "chunked"
+        return ("chunked", "structural",
+                f"M >= CHUNK_THRESHOLD (1<<{CHUNK_THRESHOLD.bit_length() - 1})",
+                ())
+    if tune != "off":
+        from repro.tune import rank_incore
+        res = rank_incore(nq, n, m, backend=backend, metric=metric,
+                          dtype=dtype, mode=tune)
+        impl = res.config.impl
+        if impl in ("rowscan", "wavefront"):
+            return (impl, res.source,
+                    f"in-core ranking ({res.source})", res.candidates)
     if m < 2 * n:
-        return "wavefront"
-    return "rowscan"
+        return ("wavefront", "legacy",
+                "M < 2N: diagonal depth is cheap", ())
+    return ("rowscan", "legacy", "default in-core schedule", ())
+
+
+def choose_impl(nq: int, n: int, m: int, *, backend: Optional[str] = None,
+                mesh=None, chunk: Optional[int] = None,
+                has_exclusion: bool = False,
+                top_k: Optional[int] = None, tune: str = "off",
+                metric: str = "abs_diff", dtype: str = "int32") -> str:
+    """The ``impl="auto"`` dispatch rule (documented in the module docstring,
+    exercised directly by the tests).  ``tune`` defaults to ``'off'``
+    (the legacy heuristics) here; ``SdtwRequest`` defaults to
+    ``'model'``."""
+    return choose_impl_explained(
+        nq, n, m, backend=backend, mesh=mesh, chunk=chunk,
+        has_exclusion=has_exclusion, top_k=top_k, tune=tune,
+        metric=metric, dtype=dtype)[0]
 
 
 def _bucket_len(length: int) -> int:
@@ -164,7 +211,8 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
          top_k: Optional[int] = None, return_positions: bool = False,
          return_spans: bool = False, excl_zone: Optional[int] = None,
          excl_mode: str = "end", block_q: Optional[int] = None,
-         block_m: Optional[int] = None):
+         block_m: Optional[int] = None, tune: str = "model",
+         explain: bool = False):
     """Subsequence-DTW distances of ``queries`` against ``reference``.
 
     Args:
@@ -211,6 +259,19 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
                  ``top_k``.
       block_q/block_m: Pallas kernel block shape (``None`` = auto-tuned
                  per backend; see ``repro.kernels.sdtw.resolve_blocks``).
+      tune:      ``'model'`` (default) fills unset performance knobs —
+                 in-core impl choice, kernel blocks, chunk size, sharded
+                 microbatch count — from the ``repro.tune`` oracle (table
+                 hit, else analytical cost model); ``'measure'``
+                 additionally refines this bucket with a short on-device
+                 measured search *before* dispatch (once per process per
+                 bucket); ``'off'`` keeps the legacy hand-tuned
+                 constants.  Explicit kwargs always win, and every tuned
+                 knob is bitwise-safe: int32 results are invariant to it.
+      explain:   return ``(result, decision)`` where ``decision`` is the
+                 ``repro.tune.DispatchDecision`` describing which impl
+                 and knobs ran and why (not supported for ragged lists —
+                 buckets may dispatch differently).
 
     Returns: (nq,) distances in the accumulator dtype — scalar for a single
     1-D query; a (dists, positions) pair or (dists, starts, ends) triple
@@ -223,7 +284,7 @@ def sdtw(queries, reference, qlens=None, *, metric: str = "abs_diff",
         n_micro=n_micro, top_k=top_k, return_positions=return_positions,
         return_spans=return_spans, excl_zone=excl_zone,
         excl_mode=excl_mode, block_q=block_q, block_m=block_m,
-        op="sdtw").run()
+        tune=tune, explain=explain, op="sdtw").run()
 
 
 def _execute_sdtw(req: SdtwRequest):
@@ -232,13 +293,18 @@ def _execute_sdtw(req: SdtwRequest):
     resolution, ``impl='auto'`` dispatch, and the execution paths."""
     (queries, reference, qlens, metric, impl, chunk, excl_lo, excl_hi,
      mesh, ref_axis, n_micro, top_k, return_positions, return_spans,
-     excl_zone, excl_mode, block_q, block_m) = (
+     excl_zone, excl_mode, block_q, block_m, tune, explain) = (
         req.queries, req.reference, req.qlens, req.metric, req.impl,
         req.chunk, req.excl_lo, req.excl_hi, req.mesh, req.ref_axis,
         req.n_micro, req.top_k, req.return_positions, req.return_spans,
-        req.excl_zone, req.excl_mode, req.block_q, req.block_m)
+        req.excl_zone, req.excl_mode, req.block_q, req.block_m,
+        req.tune, req.explain)
 
     if _is_ragged(queries):
+        if explain:
+            raise ValueError(
+                "explain=True is not supported for ragged query lists — "
+                "each bucket may dispatch differently; call per bucket")
         return _sdtw_ragged(queries, reference, metric=metric, impl=impl,
                             chunk=chunk, excl_lo=excl_lo, excl_hi=excl_hi,
                             mesh=mesh, ref_axis=ref_axis, n_micro=n_micro,
@@ -246,7 +312,7 @@ def _execute_sdtw(req: SdtwRequest):
                             return_positions=return_positions,
                             return_spans=return_spans, excl_zone=excl_zone,
                             excl_mode=excl_mode,
-                            block_q=block_q, block_m=block_m)
+                            block_q=block_q, block_m=block_m, tune=tune)
 
     queries = jnp.asarray(queries)
     reference = jnp.asarray(reference)
@@ -257,15 +323,30 @@ def _execute_sdtw(req: SdtwRequest):
     m = reference.shape[0]
     if qlens is not None:
         qlens = jnp.asarray(qlens, jnp.int32)
+    dtype = str(jnp.result_type(queries, reference))
+
+    if tune == "measure":
+        # Measured refinement must never run inside a trace — resolve the
+        # bucket eagerly here (once per process per bucket; the LRU and
+        # the process table absorb repeats), then every downstream
+        # consultation is a table hit.
+        from repro.tune import resolve as _tune_resolve
+        _tune_resolve(nq, n, m, metric=metric, dtype=dtype,
+                      mode="measure", span=return_spans)
 
     has_excl = excl_lo is not None or excl_hi is not None
     if impl == "auto":
-        impl = choose_impl(nq, n, m, mesh=mesh, chunk=chunk,
-                           has_exclusion=has_excl, top_k=top_k)
+        impl, source, reason, candidates = choose_impl_explained(
+            nq, n, m, mesh=mesh, chunk=chunk, has_exclusion=has_excl,
+            top_k=top_k, tune=tune, metric=metric, dtype=dtype)
+    else:
+        source, reason, candidates = (
+            "explicit", "impl forced by the caller", ())
     if impl == "pallas" and has_excl:
         raise ValueError("the pallas kernel does not support exclusion "
                          "zones; use impl='rowscan' or 'chunked'")
 
+    config: dict = {}
     if impl in ("rowscan", "wavefront"):
         lo = _normalize_excl(excl_lo, nq) if has_excl else None
         hi = _normalize_excl(excl_hi, nq) if has_excl else None
@@ -273,17 +354,29 @@ def _execute_sdtw(req: SdtwRequest):
                          return_positions=return_positions,
                          return_spans=return_spans)
     elif impl == "pallas":
-        from repro.kernels.sdtw import sdtw_pallas
+        from repro.kernels.sdtw import resolve_blocks, sdtw_pallas
+        if explain:
+            interp = jax.default_backend() != "tpu"
+            rbq, rbm, rscheme, rrt = resolve_blocks(
+                nq, m, block_q, block_m, None, None, interp, n=n,
+                metric=metric, dtype=dtype, tune=tune, span=return_spans)
+            config = {"block_q": rbq, "block_m": rbm,
+                      "scan_scheme": rscheme, "row_tile": rrt}
         if chunk is None:
             out = sdtw_pallas(queries, reference, qlens, metric,
                               block_q=block_q, block_m=block_m,
                               return_positions=return_positions,
-                              return_spans=return_spans)
+                              return_spans=return_spans, tune=tune)
         else:
             out = _pallas_streamed(queries, reference, qlens, metric, chunk,
                                    block_q, block_m, return_positions,
-                                   return_spans)
+                                   return_spans, tune=tune)
     elif impl == "chunked":
+        if chunk is None and tune != "off":
+            from repro.tune import tuned_chunk
+            chunk = tuned_chunk(nq, n, m, metric=metric, dtype=dtype,
+                                mode=tune)
+        config = {"chunk": chunk or DEFAULT_CHUNK}
         out = sdtw_chunked(queries, reference, qlens, metric,
                            chunk or DEFAULT_CHUNK,
                            _normalize_excl(excl_lo, nq),
@@ -293,6 +386,15 @@ def _execute_sdtw(req: SdtwRequest):
                            return_spans=return_spans, excl_mode=excl_mode)
     else:  # sharded
         from repro.distributed.sdtw_sharded import sdtw_sharded
+        if n_micro is None and tune != "off" and mesh is not None:
+            from repro.tune import resolve_n_micro
+            sizes = dict(mesh.shape)
+            n_mp = int(sizes.pop(ref_axis, 1))
+            n_dp = int(np.prod(list(sizes.values()))) if sizes else 1
+            n_micro = resolve_n_micro(nq, n_dp, n_mp, n=n, m=m,
+                                      metric=metric, dtype=dtype,
+                                      mode=tune)
+        config = {"chunk": chunk or DEFAULT_CHUNK, "n_micro": n_micro}
         out = sdtw_sharded(queries, reference, qlens, metric=metric,
                            mesh=mesh, axis=ref_axis, n_micro=n_micro,
                            chunk=chunk or DEFAULT_CHUNK,
@@ -302,8 +404,14 @@ def _execute_sdtw(req: SdtwRequest):
                            return_positions=return_positions,
                            return_spans=return_spans, excl_mode=excl_mode)
     if single:
-        return (tuple(o[0] for o in out) if isinstance(out, tuple)
-                else out[0])
+        out = (tuple(o[0] for o in out) if isinstance(out, tuple)
+               else out[0])
+    if explain:
+        from repro.tune import DispatchDecision
+        score = candidates[0][1] if candidates else None
+        return out, DispatchDecision(impl=impl, source=source,
+                                     reason=reason, config=config,
+                                     score_us=score, candidates=candidates)
     return out
 
 
@@ -405,7 +513,8 @@ def align(queries, reference, qlens=None, *, metric: str = "abs_diff",
 
 
 def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
-                     block_m, return_positions, return_spans=False):
+                     block_m, return_positions, return_spans=False,
+                     tune: str = "off"):
     """The ``impl='pallas'`` + ``chunk=`` dispatcher.
 
     Device-resident references (M ≤ ``PALLAS_FUSED_MAX``) take the
@@ -423,12 +532,12 @@ def _pallas_streamed(queries, reference, qlens, metric, chunk, block_q,
         return sdtw_pallas(queries, reference, qlens, metric,
                            block_q=block_q, block_m=block_m,
                            return_positions=return_positions,
-                           return_spans=return_spans)
+                           return_spans=return_spans, tune=tune)
     return _pallas_scan_streamed(queries, reference, qlens, metric,
                                  chunk=chunk, block_q=block_q,
                                  block_m=block_m,
                                  return_positions=return_positions,
-                                 return_spans=return_spans)
+                                 return_spans=return_spans, tune=tune)
 
 
 def _unpack_pallas_carry(carry, return_positions, return_spans):
@@ -441,10 +550,10 @@ def _unpack_pallas_carry(carry, return_positions, return_spans):
 
 @functools.partial(jax.jit, static_argnames=(
     "metric", "chunk", "block_q", "block_m", "return_positions",
-    "return_spans"))
+    "return_spans", "tune"))
 def _pallas_scan_streamed(queries, reference, qlens, metric, *, chunk,
                           block_q, block_m, return_positions,
-                          return_spans):
+                          return_spans, tune: str = "off"):
     """Device-side chunk pipeline: one jitted ``lax.scan`` over statically-
     shaped reference slices, chaining the kernel carry in device memory —
     no host hop between slices, one compile for any reference length (the
@@ -468,7 +577,7 @@ def _pallas_scan_streamed(queries, reference, qlens, metric, *, chunk,
         _, c2 = sdtw_pallas(queries, sl, qlens, metric, block_q=block_q,
                             block_m=block_m, carry=c, ref_offset=off,
                             ref_len=cl, return_carry=True,
-                            track_start=return_spans)
+                            track_start=return_spans, tune=tune)
         return c2, None
 
     carry, _ = jax.lax.scan(step, carry, (slices, offs, clens))
@@ -541,8 +650,8 @@ def pad_ragged_bucket(qs, idxs, blen: int):
 
 def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
                  excl_hi, mesh, ref_axis, n_micro=None, top_k,
-                 return_positions,
-                 return_spans, excl_zone, excl_mode, block_q, block_m):
+                 return_positions, return_spans, excl_zone, excl_mode,
+                 block_q, block_m, tune: str = "model"):
     """Bucketed dispatch for mixed-length query sets."""
     qs = [np.asarray(q) for q in queries]
     nq = len(qs)
@@ -568,7 +677,8 @@ def _sdtw_ragged(queries, reference, *, metric, impl, chunk, excl_lo,
                    top_k=top_k,
                    return_positions=return_positions,
                    return_spans=return_spans, excl_zone=excl_zone,
-                   excl_mode=excl_mode, block_q=block_q, block_m=block_m)
+                   excl_mode=excl_mode, block_q=block_q, block_m=block_m,
+                   tune=tune)
         res = res if isinstance(res, tuple) else (res,)
         for t in range(n_out):
             for k, i in enumerate(idxs):

@@ -55,6 +55,83 @@ class PlatformModel:
         return self.cells_per_s * ops_per_cell / (self.peak_gintops * 1e9)
 
 
+@dataclasses.dataclass(frozen=True)
+class BackendModel:
+    """Calibrated per-term execution-cost constants for one *execution
+    backend of this repo* (as opposed to ``PlatformModel``, which models
+    the paper's baseline hardware as whole-kernel cells/s).
+
+    ``repro.tune.cost.KernelCostModel`` prices every engine regime
+    (rowscan / wavefront / chunked / pallas) per configuration from these
+    constants; the units are microseconds per the named event. The
+    ``interpret`` constants were fitted to in-container XLA-CPU
+    measurements of the committed bench shapes (see
+    ``repro/tune/tables/interpret.json`` provenance); the ``tpu``
+    constants are anchored to the v5e roofline (``launch/roofline.V5E``)
+    and the kernel's documented VMEM working set — on real TPU hardware
+    the measured stage (``tune='measure'``) refines them into the table.
+    """
+    name: str                    # 'interpret' (XLA CPU) | 'tpu'
+    call_fixed_us: float         # per-dispatch overhead of one jitted call
+    row_step_fixed_us: float     # per sequential DP row step (rowscan)
+    scan_elem_us: float          # per accumulator element per row scan
+    wf_step_fixed_us: float      # per anti-diagonal step (wavefront)
+    wf_elem_us: float            # per (query-row) element per wavefront step
+    chunk_fixed_us: float        # per reference tile (chunked streaming)
+    cache_elems: int             # live-row working-set knee (elements);
+                                 # beyond it scan_elem_us inflates
+    tile_fixed_us: float         # per pallas grid cell (launch/fill)
+    pallas_row_fixed_us: float   # per DP row per pallas grid cell
+    pallas_elem_us: float        # per DP cell, scheme-independent base
+    pallas_pass_us: float        # per DP cell per scan *pass* (depth term)
+    scheme_mult: tuple           # (('shift', x), ('assoc', y)) pass-cost
+                                 # multipliers — which scan scheme is cheap
+                                 # is exactly what differs per backend
+    hbm_bw_bytes_per_s: float    # streaming bandwidth for the HBM term
+    vmem_budget_words: int       # pallas per-config working-set cap
+
+    def scheme_cost_mult(self, scheme: str) -> float:
+        return dict(self.scheme_mult)[scheme]
+
+
+#: XLA-CPU (pallas interpret mode) — fitted to this container's measured
+#: bench shapes: rowscan ~0.027us/elem/row + ~60us/row-step; wavefront
+#: ~0.004us/elem/step + ~0.4us/step (why the wavefront wins every CPU
+#: in-core shape, 2.5-6.7x measured); interpret-mode pallas pays a
+#: per-scan-pass cost that grows with log2(block_m * block_q), so small
+#: tiles win despite more grid cells.
+INTERPRET_BACKEND = BackendModel(
+    name="interpret", call_fixed_us=500.0, row_step_fixed_us=60.0,
+    scan_elem_us=0.027, wf_step_fixed_us=0.4, wf_elem_us=0.004,
+    chunk_fixed_us=200.0, cache_elems=1 << 17, tile_fixed_us=150.0,
+    pallas_row_fixed_us=30.0, pallas_elem_us=0.01, pallas_pass_us=0.013,
+    scheme_mult=(("assoc", 1.0), ("shift", 1.6)),
+    hbm_bw_bytes_per_s=20e9, vmem_budget_words=1 << 21)
+
+#: TPU v5e — roofline-anchored (819 GB/s HBM, ~16 MB VMEM/core): the
+#: vector unit makes the Hillis-Steele 'shift' scan the cheap scheme, the
+#: per-cell cost is far below CPU, and the binding constraint is the VMEM
+#: working set ``block_q * (3*block_m + 3*N)`` words (span mode
+#: ``block_q * (6*block_m + 5*N)``).
+TPU_BACKEND = BackendModel(
+    name="tpu", call_fixed_us=30.0, row_step_fixed_us=2.0,
+    scan_elem_us=0.0004, wf_step_fixed_us=1.0, wf_elem_us=0.001,
+    chunk_fixed_us=40.0, cache_elems=1 << 21, tile_fixed_us=3.5,
+    pallas_row_fixed_us=0.05, pallas_elem_us=0.00005,
+    pallas_pass_us=0.00002,
+    scheme_mult=(("shift", 1.0), ("assoc", 1.4)),
+    hbm_bw_bytes_per_s=819e9, vmem_budget_words=1 << 21)
+
+BACKENDS = {b.name: b for b in (INTERPRET_BACKEND, TPU_BACKEND)}
+
+
+def backend_model(name: str) -> BackendModel:
+    """The cost-constant set for an execution backend; every non-TPU
+    backend string ('cpu', 'gpu', ...) maps to the interpret model until
+    it gets its own calibration."""
+    return BACKENDS.get(name, INTERPRET_BACKEND)
+
+
 CPU_ARM = PlatformModel(
     "cpuarm", cells_per_s=0.133e9, watts=24.8, peak_gintops=40.0,
     ai_intop_per_byte=0.55,

@@ -64,6 +64,8 @@ EXCL_MODES = ("end", "span")
 SEARCH_ENGINE_IMPLS = ("auto", "rowscan", "pallas")
 #: Request operations.
 OPS = ("sdtw", "search_topk")
+#: Autotuning modes (``SdtwRequest.tune``) — see ``repro.tune``.
+TUNE_MODES = ("model", "measure", "off")
 
 
 def resolve_mesh(mesh, mesh_shape):
@@ -215,6 +217,15 @@ class SdtwRequest:
     excl_mode: str = "end"
     block_q: Optional[int] = None
     block_m: Optional[int] = None
+    #: Autotuning mode: 'model' (cost model + tuning table fill unset
+    #: knobs, the default), 'measure' (refine the bucket on-device once
+    #: per process before dispatch), 'off' (legacy hand-tuned constants).
+    #: Bitwise-safe: int32 results are invariant to it.
+    tune: str = "model"
+    #: Return ``(result, repro.tune.DispatchDecision)`` instead of the
+    #: bare result. Rejected by the serve tier (a coalesced batch has no
+    #: single per-request decision) and for ragged lists.
+    explain: bool = False
     op: str = "sdtw"
     # --- serve-tier-only -------------------------------------------------
     # Scheduling metadata for the admission queue (``repro.serve``):
@@ -262,6 +273,9 @@ class SdtwRequest:
             raise ValueError(f"tenant must be hashable (it keys per-tenant "
                              f"quotas), got {type(self.tenant).__name__}") \
                 from None
+        if self.tune not in TUNE_MODES:
+            raise ValueError(f"tune must be one of {TUNE_MODES}, got "
+                             f"{self.tune!r}")
         if self.op == "search_topk":
             return self._validate_search()
         if self.impl not in IMPLS:
@@ -361,7 +375,7 @@ class SdtwRequest:
         """
         return (self.op, self.metric, self.impl, self.chunk,
                 self.top_k, self.return_positions, self.return_spans,
-                self.excl_mode, self.block_q, self.block_m,
+                self.excl_mode, self.block_q, self.block_m, self.tune,
                 self.ref_axis, self.n_micro,
                 _mesh_fingerprint(resolve_mesh(self.mesh, self.mesh_shape)),
                 _scalar_or_id(self.excl_zone),

@@ -13,14 +13,22 @@ DP start-pointer lane, so streamed slices report exact global match
 spans; the plain variant keeps the untaxed value+position lanes.
 
 Auto-tuning (``block_q``/``block_m``/``scan_scheme``/``row_tile`` default
-to ``None``): on TPU the defaults are the sublane-aligned (8, 512) block
+to ``None``): with ``tune='off'`` (the kernel-level default) the legacy
+hand-tuned constants apply — on TPU the sublane-aligned (8, 512) block
 with the Hillis-Steele ``"shift"`` scan and ``row_tile=8``; in interpret
 mode (off-TPU) the block is fitted to the actual batch (no sublane
 constraint to respect) with a tile large enough to cover the reference up
 to a working-set budget, the work-efficient ``"assoc"`` scan, and no row
-unrolling (XLA-CPU gains nothing from it). Both configurations produce
-bitwise-identical int32 results — the schemes differ only in float32
-summation order.
+unrolling (XLA-CPU gains nothing from it). With ``tune='model'`` (what
+``engine.sdtw`` passes by default) the unset knobs come from the
+``repro.tune`` oracle instead: a tuning-table hit for this (backend,
+metric, dtype, pow-2 shape bucket), else the analytical cost model's
+ranked pick (``tune='measure'`` is downgraded to the table here — this
+resolves at trace time, where measuring would time tracing; the engine
+runs measured refinement *before* dispatch). Explicit knobs always win.
+Every configuration produces bitwise-identical int32 results — schemes
+and block shapes differ only in float32 summation order, so tuning can
+change speed but never answers.
 """
 from __future__ import annotations
 
@@ -53,16 +61,32 @@ def _pow2_at_least(x: int) -> int:
 
 
 def resolve_blocks(b: int, m: int, block_q, block_m, scan_scheme, row_tile,
-                   interpret: bool):
+                   interpret: bool, *, n=None, metric: str = "abs_diff",
+                   dtype: str = "int32", tune: str = "off",
+                   span: bool = False):
     """Fill in the auto (None) kernel tuning knobs for this call shape.
 
-    Returns ``(block_q, block_m, scan_scheme, row_tile)``. Interpret mode
-    has no sublane/lane alignment to respect, so the query block fits the
-    batch exactly (padding queries to a multiple of 8 would be pure wasted
-    compute) and the reference tile grows to cover the reference up to
-    ``INTERPRET_ELEM_BUDGET`` (fewer boundary-column crossings, wider
-    work-efficient scans).
+    Returns ``(block_q, block_m, scan_scheme, row_tile)``. With
+    ``tune != 'off'`` (and ``n`` known) the unset knobs come from the
+    ``repro.tune`` oracle — table hit, else cost-model pick; explicit
+    (non-None) knobs always win. Otherwise the legacy heuristics apply:
+    interpret mode has no sublane/lane alignment to respect, so the query
+    block fits the batch exactly (padding queries to a multiple of 8
+    would be pure wasted compute) and the reference tile grows to cover
+    the reference up to ``INTERPRET_ELEM_BUDGET`` (fewer boundary-column
+    crossings, wider work-efficient scans).
     """
+    if (tune != "off" and n is not None
+            and (block_q is None or block_m is None
+                 or scan_scheme is None or row_tile is None)):
+        from repro.tune import tuned_blocks
+        tq, tm, ts, tr = tuned_blocks(
+            b, m, n=int(n), backend="tpu" if not interpret else "interpret",
+            metric=metric, dtype=dtype, mode=tune, span=span)
+        block_q = tq if block_q is None else block_q
+        block_m = tm if block_m is None else block_m
+        scan_scheme = ts if scan_scheme is None else scan_scheme
+        row_tile = tr if row_tile is None else row_tile
     if block_q is None:
         block_q = (DEFAULT_BLOCK_Q if not interpret
                    else max(1, min(INTERPRET_MAX_BLOCK_Q, b)))
@@ -72,8 +96,11 @@ def resolve_blocks(b: int, m: int, block_q, block_m, scan_scheme, row_tile,
         else:
             # Largest power of two keeping block_q * block_m at or under
             # the budget (rounding the quotient *up* would overshoot by
-            # up to 1.5x for non-power-of-two batches).
-            budget = max(512, INTERPRET_ELEM_BUDGET // block_q)
+            # up to 1.5x for non-power-of-two batches). The floor is 16
+            # (the block_m minimum), not 512: flooring the *quotient* at
+            # 512 let an explicit block_q > 4096 push block_q * block_m
+            # past INTERPRET_ELEM_BUDGET.
+            budget = max(16, INTERPRET_ELEM_BUDGET // block_q)
             budget_pow2 = 1 << (budget.bit_length() - 1)
             block_m = min(max(16, _pow2_at_least(m)), budget_pow2)
     if scan_scheme is None:
@@ -109,7 +136,7 @@ def pallas_carry_init(b: int, n: int, dtype, track_start: bool = False):
     static_argnames=("metric", "block_q", "block_m", "interpret",
                      "return_carry", "return_positions", "return_spans",
                      "track_start", "scan_scheme", "row_tile",
-                     "return_lastrow"))
+                     "return_lastrow", "tune"))
 def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 block_q: int | None = None,
                 block_m: int | None = None,
@@ -124,7 +151,8 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
                 ref_lead=0,
                 scan_scheme: str | None = None,
                 row_tile: int | None = None,
-                return_lastrow: bool = False):
+                return_lastrow: bool = False,
+                tune: str = "off"):
     """Batched sDTW on TPU via Pallas. queries (B, N), reference (M,) → (B,).
 
     VMEM working set per grid cell ≈
@@ -138,6 +166,8 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     ``block_q · block_m`` output block (+ its int32 start lane in span
     mode). Block shapes must be chosen so this fits (~16 MB VMEM on v5e);
     the TPU defaults handle N ≤ 48K (plain) / N ≤ 24K (spans) comfortably.
+    ``repro.tune.KernelCostModel.vmem_words`` prices candidates with this
+    same formula, so any config the autotuner proposes fits by construction.
 
     Chunk-carry protocol: ``carry`` is an optional
     ``(bcol (B, N), best (B,), pos (B,))`` triple — the DP boundary column
@@ -183,7 +213,10 @@ def sdtw_pallas(queries, reference, qlens=None, metric: str = "abs_diff",
     acc = accum_dtype(jnp.result_type(queries, reference))
     BIG = big(acc)
     block_q, block_m, scan_scheme, row_tile = resolve_blocks(
-        b, m, block_q, block_m, scan_scheme, row_tile, interpret)
+        b, m, block_q, block_m, scan_scheme, row_tile, interpret,
+        n=n, metric=metric,
+        dtype=str(jnp.result_type(queries, reference)), tune=tune,
+        span=return_spans or track_start)
 
     carry = tuple(carry) if carry is not None else ()
     track = return_spans or track_start or len(carry) == 5

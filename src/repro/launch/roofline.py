@@ -120,6 +120,24 @@ def roofline(flops_per_chip: float, bytes_per_chip: float,
         n_chips=n_chips)
 
 
+def kernel_roofline(cells: float, hbm_bytes: float, *,
+                    cells_per_s: float, hbm_bw: Optional[float] = None):
+    """Two-term roofline bound for one sDTW kernel configuration.
+
+    Unlike :func:`roofline` (which extracts terms from compiled HLO), this
+    prices an *analytic* configuration before anything is compiled — the
+    autotuner (``repro.tune.cost``) calls it per candidate: ``cells`` DP
+    cells at the backend's sustained ``cells_per_s`` versus ``hbm_bytes``
+    of streaming traffic at ``hbm_bw``. Returns
+    ``(bound_time_s, dominant)`` where dominant is 'compute' or 'memory'.
+    """
+    hbm_bw = V5E["hbm_bw"] if hbm_bw is None else hbm_bw
+    compute_s = cells / cells_per_s if cells_per_s else 0.0
+    memory_s = hbm_bytes / hbm_bw if hbm_bw else 0.0
+    return (max(compute_s, memory_s),
+            "compute" if compute_s >= memory_s else "memory")
+
+
 # ---------------------------------------------------------------------------
 # Analytic MODEL_FLOPS per cell
 # ---------------------------------------------------------------------------

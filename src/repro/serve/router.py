@@ -143,6 +143,11 @@ class Router:
         elif kwargs:
             raise ValueError("pass an SdtwRequest or kwargs, not both")
         request.validate()
+        if getattr(request, "explain", False):
+            raise ValueError(
+                "explain=True is not servable: a coalesced batch has no "
+                "single per-request dispatch decision; call engine.sdtw "
+                "directly for the DispatchDecision")
         if request.op == "search_topk" and request.cache is None:
             request = dataclasses.replace(request, cache=self.cache)
         trace = RequestTrace(op=request.op, nq=_request_nq(request))
@@ -184,7 +189,14 @@ class Router:
         set's backlog-gated growth. Shape the request like the
         coalesced buckets your windows will form — e.g. a list of
         ``window_full_queries`` serving-length queries against the
-        production reference. Returns the number of devices warmed."""
+        production reference. Returns the number of devices warmed.
+
+        Also pre-*tunes*: every pow-2 bucket the request's queries
+        dispatch as is resolved through the ``repro.tune`` oracle first
+        (under ``tune='measure'`` the measured search runs here, at
+        warmup — never on the request path), so the warmed executables
+        are compiled for the exact tuned configurations traffic will
+        hit."""
         if self._closed:
             raise RuntimeError("router is closed")
         if request is None:
@@ -194,6 +206,8 @@ class Router:
         request.validate()
         if request.op == "search_topk" and request.cache is None:
             request = dataclasses.replace(request, cache=self.cache)
+        from repro.tune import pretune_request
+        pretune_request(request)
         return self._pool.warmup(request)
 
     # Blocking conveniences — the offline call signatures, served.

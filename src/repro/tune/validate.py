@@ -1,0 +1,131 @@
+"""Validate the cost model's *ranking* against measured bench rows.
+
+The autotuner's analytical stage is only trusted for ordering (pick the
+cheaper config), never for absolute microseconds — so that is exactly
+what CI validates: every pair of measured ``BENCH_baseline.json`` rows
+that map onto model-priceable configurations of the *same shape* must be
+ordered the same way by the model.  Deterministic on both sides (the
+model is closed-form, the baseline is committed), so this gates in CI
+without timer noise.
+
+Recognized row families (recorded on the CPU/interpret host):
+
+  * ``sdtw_kernel/{rowscan_tropical|wavefront_paper_faithful|
+    pallas_interpret}_b{B}_n{N}_m{M}`` — in-core impl ranking (the
+    pallas row is priced at ``resolve_blocks``'s default interpret
+    config, which is what that row ran).
+  * ``sdtw_kernel/engine_chunked_b{B}_n{N}_m{M}_c{C}`` (non-span) —
+    chunk-size ranking.
+
+Usage (the CI step)::
+
+    python -m repro.tune.validate BENCH_baseline.json \
+        --min-agreement 0.6 --min-pairs 3
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import re
+
+from .cost import get_cost_model
+
+_INCORE_RE = re.compile(
+    r"sdtw_kernel/(rowscan_tropical|wavefront_paper_faithful|"
+    r"pallas_interpret)_b(\d+)_n(\d+)_m(\d+)$")
+_CHUNK_RE = re.compile(
+    r"sdtw_kernel/engine_chunked_b(\d+)_n(\d+)_m(\d+)_c(\d+)$")
+_IMPL_OF = {"rowscan_tropical": "rowscan",
+            "wavefront_paper_faithful": "wavefront",
+            "pallas_interpret": "pallas"}
+
+
+def _model_us(model, impl: str, b: int, n: int, m: int) -> float:
+    if impl == "rowscan":
+        return model.rowscan_us(b, n, m)
+    if impl == "wavefront":
+        return model.wavefront_us(b, n, m)
+    # The pallas_interpret row ran resolve_blocks' default config.
+    from repro.kernels.sdtw import resolve_blocks
+    bq, bm, scheme, rt = resolve_blocks(b, m, None, None, None, None, True)
+    return model.pallas_us(b, n, m, bq, bm, scheme, rt)
+
+
+def extract_pairs(rows, backend: str = "interpret"):
+    """Comparable (model_us, measured_us, label) entries grouped by
+    shape; returns the flat list of intra-group pairs."""
+    model = get_cost_model(backend)
+    groups: dict = {}
+    for row in rows:
+        name, us = row["name"], float(row["us_per_call"])
+        m1 = _INCORE_RE.match(name)
+        if m1:
+            impl = _IMPL_OF[m1.group(1)]
+            b, n, m = (int(m1.group(i)) for i in (2, 3, 4))
+            groups.setdefault(("incore", b, n, m), []).append(
+                (_model_us(model, impl, b, n, m), us, name))
+            continue
+        m2 = _CHUNK_RE.match(name)
+        if m2:
+            b, n, m, c = (int(m2.group(i)) for i in (1, 2, 3, 4))
+            groups.setdefault(("chunk", b, n, m), []).append(
+                (model.chunked_us(b, n, m, c), us, name))
+    pairs = []
+    for members in groups.values():
+        pairs.extend(itertools.combinations(members, 2))
+    return pairs
+
+
+def validate_ranking(rows, *, backend: str = "interpret"):
+    """Pairwise-majority check.  Returns ``(agree, total, report)`` where
+    ``agree/total`` is the fraction of comparable same-shape pairs the
+    model orders like the measurement (ties in either ordering count as
+    agreement)."""
+    pairs = extract_pairs(rows, backend)
+    agree, report = 0, []
+    for (mu_a, us_a, name_a), (mu_b, us_b, name_b) in pairs:
+        model_sign = (mu_a > mu_b) - (mu_a < mu_b)
+        meas_sign = (us_a > us_b) - (us_a < us_b)
+        ok = model_sign == 0 or meas_sign == 0 or model_sign == meas_sign
+        agree += ok
+        report.append(
+            f"{'ok       ' if ok else 'DISAGREES'} {name_a} vs {name_b}: "
+            f"model {mu_a:.0f}us vs {mu_b:.0f}us, measured "
+            f"{us_a:.0f}us vs {us_b:.0f}us")
+    return agree, len(pairs), report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="measured bench rows (JSON)")
+    ap.add_argument("--backend", default="interpret")
+    ap.add_argument("--min-agreement", type=float, default=0.6,
+                    help="required pairwise-majority fraction")
+    ap.add_argument("--min-pairs", type=int, default=3,
+                    help="fail if fewer comparable pairs are found "
+                         "(guards against the row names drifting away "
+                         "from the recognizers)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        rows = json.load(f)
+    agree, total, report = validate_ranking(rows, backend=args.backend)
+    for line in report:
+        print("  " + line)
+    frac = agree / total if total else 0.0
+    print(f"cost-model ranking: {agree}/{total} pairs agree "
+          f"({frac:.0%}; need >= {args.min_agreement:.0%} over >= "
+          f"{args.min_pairs} pairs)")
+    if total < args.min_pairs:
+        raise SystemExit(
+            f"only {total} comparable pairs found (need "
+            f"{args.min_pairs}) — did the bench row names drift?")
+    if frac < args.min_agreement:
+        raise SystemExit(
+            f"cost-model ranking disagrees with the measured baseline: "
+            f"{agree}/{total} = {frac:.0%} < {args.min_agreement:.0%}")
+    print("cost-model ranking gate passed")
+
+
+if __name__ == "__main__":
+    main()

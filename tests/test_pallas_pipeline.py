@@ -250,6 +250,23 @@ def test_resolve_blocks_contract():
                                                               "shift", 3)
 
 
+def test_resolve_blocks_budget_property():
+    """The interpret working-set budget holds for EVERY explicit block_q,
+    not just the auto-fitted ones: the old code floored the per-row
+    quotient at 512, so block_q > 4096 pushed ``block_q * block_m`` past
+    ``INTERPRET_ELEM_BUDGET`` (an 8 MB live-row array became 16+ MB)."""
+    from repro.kernels.sdtw.ops import INTERPRET_ELEM_BUDGET
+    for bq in (1, 2, 3, 7, 32, 100, 1024, 4096, 4097, 8192,
+               1 << 15, 1 << 17):
+        for m in (16, 100, 4096, 1 << 18, 1 << 22):
+            got_bq, bm, _, _ = resolve_blocks(bq, m, bq, None, None, None,
+                                              True)
+            assert got_bq == bq
+            assert bm >= 16
+            assert bq * bm <= INTERPRET_ELEM_BUDGET, (bq, m, bm)
+            assert bm & (bm - 1) == 0, (bq, m, bm)   # power of two
+
+
 def test_search_pallas_engine_matches_rowscan(rng):
     """Pruned top-K search scored on the kernel's last-row capture ==
     rowscan survivors, bitwise, with genuine pruning happening."""

@@ -1,0 +1,334 @@
+"""The autotuner: table persistence, oracle correctness, bitwise safety.
+
+Three contracts under test:
+
+  1. **Persistence** — ``TuningTable`` survives a save/load round trip,
+     rejects wrong schema versions and corrupt files by *degrading to
+     empty with a warning* (a broken table must never take the engine
+     down), and drops malformed entries individually.
+  2. **Oracle** — resolution precedence (explicit kwargs > table >
+     model), the LRU in front of it, ``choose_impl``'s model ranking vs
+     its legacy rules, and the cost model's ranking agreement with the
+     committed measured baseline (the same gate CI runs via
+     ``repro.tune.validate``).
+  3. **Bitwise safety** — every knob the tuner sets (impl, blocks, scan
+     scheme, chunk, n_micro) is speed-only: tuned results are
+     bitwise-identical (int32) to ``tune='off'`` across impl × metric ×
+     spans × top-K.
+"""
+import json
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import choose_impl, choose_impl_explained, sdtw
+from repro.kernels.sdtw import resolve_blocks
+from repro.tune import (DispatchDecision, KernelCostModel, TunedConfig,
+                        TuningTable, bucket_key, cache_info, cache_keys,
+                        clear_tuning_cache, default_table, get_cost_model,
+                        pretune_request, resolve, resolve_n_micro,
+                        tuned_blocks, tuned_chunk, tuned_n_micro)
+from repro.tune.validate import validate_ranking
+
+BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_baseline.json")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_lru():
+    clear_tuning_cache()
+    yield
+    clear_tuning_cache()
+
+
+# ---------------------------------------------------------------------------
+# 1. TuningTable persistence
+# ---------------------------------------------------------------------------
+
+def test_table_round_trip(tmp_path):
+    t = TuningTable("interpret", provenance="test")
+    key = bucket_key("interpret", "abs_diff", "int32", 4, 32, 1024)
+    cfg = TunedConfig(impl="wavefront", block_q=4, block_m=512,
+                      scan_scheme="assoc", row_tile=1, chunk=8192,
+                      score_us=123.0, source="measured")
+    t.put(key, cfg)
+    path = str(tmp_path / "t.json")
+    t.save(path)
+    back = TuningTable.load(path, "interpret")
+    assert len(back) == 1 and key in back
+    assert back.get(key) == cfg
+    assert back.provenance == "test"
+
+
+def test_table_missing_file_is_empty(tmp_path):
+    t = TuningTable.load(str(tmp_path / "nope.json"), "interpret")
+    assert len(t) == 0
+
+
+def test_table_wrong_schema_recovers(tmp_path):
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "repro.tune/v999", "backend": "interpret",
+                   "entries": {}}, f)
+    with pytest.warns(UserWarning, match="schema"):
+        t = TuningTable.load(path, "interpret")
+    assert len(t) == 0
+
+
+def test_table_corrupt_json_recovers(tmp_path):
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as f:
+        f.write("{not json at all")
+    with pytest.warns(UserWarning):
+        t = TuningTable.load(path, "interpret")
+    assert len(t) == 0
+
+
+def test_table_malformed_entry_dropped(tmp_path):
+    good_key = bucket_key("interpret", "abs_diff", "int32", 2, 16, 256)
+    path = str(tmp_path / "t.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "repro.tune/v1", "backend": "interpret",
+                   "entries": {good_key: {"impl": "wavefront"},
+                               "bad": "not a dict"}}, f)
+    with pytest.warns(UserWarning, match="entr"):
+        t = TuningTable.load(path, "interpret")
+    assert len(t) == 1
+    assert t.get(good_key).impl == "wavefront"
+
+
+def test_tuned_config_json_round_trip():
+    cfg = TunedConfig(impl="pallas", block_q=8, block_m=512,
+                      scan_scheme="shift", row_tile=8, source="model")
+    assert TunedConfig.from_json(cfg.to_json()) == cfg
+    # None fields are omitted on the wire and restored as None
+    assert "chunk" not in cfg.to_json()
+
+
+def test_shipped_tables_load():
+    for backend in ("interpret", "tpu"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")      # no warning allowed
+            t = default_table(backend)
+        assert len(t) > 0, backend
+        for key in t.keys():
+            assert key.startswith(backend + "/")
+
+
+# ---------------------------------------------------------------------------
+# 2. The oracle
+# ---------------------------------------------------------------------------
+
+def test_lru_caches_resolutions():
+    resolve(4, 32, 1024, backend="interpret")
+    info0 = cache_info()
+    resolve(4, 32, 1024, backend="interpret")       # same bucket -> hit
+    resolve(3, 20, 600, backend="interpret")        # same pow-2 bucket
+    info1 = cache_info()
+    assert info1["hits"] >= info0["hits"] + 2
+    assert info1["misses"] == info0["misses"]
+
+
+def test_resolution_precedence_explicit_wins():
+    # Table entry exists for this bucket (shipped) — explicit still wins.
+    bq, bm, scheme, rt = resolve_blocks(4, 16384, 16, 256, "shift", 2,
+                                        True, n=32, tune="model")
+    assert (bq, bm, scheme, rt) == (16, 256, "shift", 2)
+    # Unset knobs come from the oracle, not the legacy fill.
+    auto = resolve_blocks(4, 16384, None, None, None, None, True,
+                          n=32, tune="model")
+    entry = default_table("interpret").get(
+        bucket_key("interpret", "abs_diff", "int32", 4, 32, 16384))
+    if entry is not None:                       # shipped table covers it
+        assert auto == (entry.block_q, entry.block_m, entry.scan_scheme,
+                        entry.row_tile)
+
+
+def test_tune_off_keeps_legacy_blocks():
+    legacy = resolve_blocks(4, 16384, None, None, None, None, True)
+    off = resolve_blocks(4, 16384, None, None, None, None, True,
+                         n=32, tune="off")
+    assert legacy == off
+
+
+def test_choose_impl_legacy_pins():
+    # tune defaults to 'off' here: the legacy rules stay bit-for-bit.
+    assert choose_impl(4, 32, 4096, backend="cpu") == "rowscan"
+    assert choose_impl(4, 32, 60, backend="cpu") == "wavefront"
+    assert choose_impl(4, 32, 1 << 18, backend="cpu") == "chunked"
+
+
+def test_choose_impl_model_ranks_incore():
+    impl, source, reason, cands = choose_impl_explained(
+        4, 32, 4096, backend="cpu", tune="model")
+    assert impl in ("rowscan", "wavefront")
+    assert source in ("model", "table:model", "table:measured",
+                      "table:default", "measured")
+    assert cands, "model ranking should be attached"
+    if source == "model":
+        assert impl == cands[0][0]
+    # structural rules stay ahead of the model
+    assert choose_impl(4, 32, 4096, backend="cpu", tune="model",
+                       chunk=1024) == "chunked"
+    assert choose_impl(4, 32, 1 << 18, backend="cpu",
+                       tune="model") == "chunked"
+    assert choose_impl(4, 32, 4096, backend="tpu", tune="model") == "pallas"
+
+
+def test_model_ranking_agrees_with_committed_baseline():
+    """The same gate CI runs: pairwise ranking agreement between the
+    analytical model and the committed measured rows."""
+    with open(BASELINE) as f:
+        rows = json.load(f)
+    agree, total, report = validate_ranking(rows, backend="interpret")
+    assert total >= 3, "bench row names drifted away from the validators"
+    frac = agree / total
+    assert frac >= 0.6, "\n".join(report)
+
+
+def test_cost_model_oracle_sanity():
+    model = get_cost_model("interpret")
+    # best_chunk is a real candidate
+    assert model.best_chunk(4, 32, 1 << 18) in \
+        KernelCostModel.CHUNK_CANDIDATES
+    # best_pallas respects the VMEM budget (plain and span mode)
+    for span in (False, True):
+        cfg = model.best_pallas(8, 64, 4096, span=span)
+        assert model.vmem_words(cfg.block_q, cfg.block_m, 64, span) \
+            <= model.backend.vmem_budget_words
+    # span working set is strictly larger
+    assert model.vmem_words(8, 512, 64, True) > \
+        model.vmem_words(8, 512, 64, False)
+    # tuned_chunk comes from the candidate ladder
+    assert tuned_chunk(4, 32, 1 << 18, backend="interpret") in \
+        KernelCostModel.CHUNK_CANDIDATES
+    # n_micro default mirrors the schedule's pipeline fill
+    assert resolve_n_micro(16, 2, 4, n=32, m=1024,
+                           backend="interpret") == tuned_n_micro(16, 2, 4)
+    assert tuned_n_micro(16, 2, 4) == max(1, min(4, -(-16 // 2)))
+
+
+def test_pretune_primes_the_lru():
+    from repro.core.request import SdtwRequest
+    rng = np.random.default_rng(0)
+    qs = [rng.integers(-50, 50, (L,)).astype(np.int32)
+          for L in (10, 33, 70)]
+    ref = rng.integers(-50, 50, (512,)).astype(np.int32)
+    req = SdtwRequest(queries=qs, reference=ref)
+    n = pretune_request(req)
+    assert n == 3                      # three pow-2 buckets
+    assert len(cache_keys()) >= 3
+    # tune='off' requests prime nothing
+    clear_tuning_cache()
+    assert pretune_request(SdtwRequest(queries=qs, reference=ref,
+                                       tune="off")) == 0
+    assert len(cache_keys()) == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. Bitwise safety + explain
+# ---------------------------------------------------------------------------
+
+def _mk(rng, nq=3, n=24, m=700):
+    q = jnp.asarray(rng.integers(-60, 60, (nq, n)).astype(np.int32))
+    r = jnp.asarray(rng.integers(-60, 60, (m,)).astype(np.int32))
+    return q, r
+
+
+@pytest.mark.parametrize("metric", ["abs_diff", "square_diff"])
+@pytest.mark.parametrize("impl", ["auto", "rowscan", "wavefront",
+                                  "pallas", "chunked"])
+def test_tuned_bitwise_invariance(rng, metric, impl):
+    """tune='model' vs tune='off' across impl x metric: identical int32
+    results on every execution path."""
+    q, r = _mk(rng)
+    kw = dict(metric=metric, impl=impl)
+    if impl == "chunked":
+        kw["chunk"] = 128
+    a = np.asarray(sdtw(q, r, tune="off", **kw))
+    b = np.asarray(sdtw(q, r, tune="model", **kw))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_tuned_bitwise_spans_and_topk(rng):
+    q, r = _mk(rng, m=2048)
+    for kw in (dict(return_spans=True),
+               dict(return_positions=True),
+               dict(top_k=3, chunk=256),
+               dict(top_k=2, chunk=256, return_spans=True,
+                    excl_mode="span")):
+        a = sdtw(q, r, tune="off", **kw)
+        b = sdtw(q, r, tune="model", **kw)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_tuned_bitwise_ragged(rng):
+    qs = [np.asarray(q) for q in
+          (rng.integers(-60, 60, 10), rng.integers(-60, 60, 33),
+           rng.integers(-60, 60, 70))]
+    qs = [q.astype(np.int32) for q in qs]
+    r = jnp.asarray(rng.integers(-60, 60, 700).astype(np.int32))
+    a = np.asarray(sdtw(qs, r, tune="off"))
+    b = np.asarray(sdtw(qs, r, tune="model"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_explain_decision_contents(rng):
+    q, r = _mk(rng)
+    out, dec = sdtw(q, r, explain=True)
+    assert isinstance(dec, DispatchDecision)
+    assert dec.impl in ("rowscan", "wavefront")
+    assert dec.source in ("model", "table:model", "table:measured",
+                          "table:default")
+    assert ":" in dec.token() and dec.token().endswith(dec.impl)
+    assert dec.candidates, "in-core ranking should be attached"
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(sdtw(q, r)))
+    # forced impl -> explicit source, no candidates
+    _, dec2 = sdtw(q, r, impl="rowscan", explain=True)
+    assert (dec2.impl, dec2.source) == ("rowscan", "explicit")
+    # chunked decision reports the tuned chunk
+    _, dec3 = sdtw(q, jnp.asarray(
+        np.tile(np.asarray(r), 400)[: 1 << 18]), explain=True)
+    assert dec3.impl == "chunked" and dec3.config.get("chunk") >= 4096
+    # pallas decision reports the resolved block config
+    _, dec4 = sdtw(q, r, impl="pallas", explain=True)
+    assert set(dec4.config) >= {"block_q", "block_m", "scan_scheme"}
+    # ragged lists cannot be explained
+    with pytest.raises(ValueError, match="ragged"):
+        sdtw([np.asarray(q)[0]], r, explain=True)
+
+
+def test_explain_rejected_by_serve():
+    from repro.core.request import SdtwRequest
+    from repro.serve import Router
+    rng = np.random.default_rng(0)
+    q = rng.integers(-50, 50, (2, 16)).astype(np.int32)
+    r = rng.integers(-50, 50, (256,)).astype(np.int32)
+    with Router(auto_dispatch=False) as router:
+        with pytest.raises(ValueError, match="explain"):
+            router.submit(SdtwRequest(queries=q, reference=r,
+                                      explain=True))
+
+
+def test_tune_validated_at_the_door():
+    with pytest.raises(ValueError, match="tune must be one of"):
+        sdtw(np.zeros((1, 4), np.int32), np.zeros(8, np.int32),
+             tune="bogus")
+
+
+def test_router_warmup_pretunes(rng):
+    from repro.serve import Router
+    q, r = _mk(rng, nq=2, n=16, m=256)
+    with Router(auto_dispatch=False) as router:
+        router.warmup(queries=np.asarray(q), reference=np.asarray(r))
+        assert len(cache_keys()) >= 1
+        fut = router.submit(queries=np.asarray(q), reference=np.asarray(r))
+        router.drain()
+        np.testing.assert_array_equal(
+            np.asarray(fut.result()),
+            np.asarray(sdtw(q, r, tune="off")))
